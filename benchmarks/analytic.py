@@ -1,0 +1,229 @@
+"""Analytic per-cell FLOP and HBM-traffic models.
+
+XLA's cost_analysis() counts while-loop bodies once (measured 88-675x
+undercount on scanned models), so the compute and memory roofline terms come
+from these closed-form counts instead; the HLO supplies the collective
+schedule (loop-aware, hlo_analysis.py) and the peak-memory analysis.
+
+Conventions: FLOPs = 2·M·N·K per matmul. Backward = 2x forward matmuls;
+full-remat training recomputes forward once more => train = 4x forward ("3x"
+without the remat re-forward; our configs remat). Attention is causal
+(=> S²/2 effective). All numbers are GLOBAL (divide by chips for per-chip).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+def _lm_forward_flops(cfg, batch: int, seq: int, *, causal: bool = True) -> dict:
+    """Per-forward-pass FLOPs for the LM family, split by component."""
+    L, D, Hq, Hkv, dh, F, V = (
+        cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head,
+        cfg.d_ff, cfg.vocab,
+    )
+    T = batch * seq
+    qkvo = 2 * T * D * (Hq * dh) * 2 + 2 * T * D * (Hkv * dh) * 2  # wq,wo + wk,wv
+    attn_factor = 0.5 if causal else 1.0
+    attn = 2 * (2 * batch * Hq * seq * seq * dh) * attn_factor     # QK^T + PV
+    if cfg.moe is None:
+        ffn_per_layer_tokens = 2 * T * D * F * 3                   # gate,up,down
+        n_ffn_dense = L
+        ffn = ffn_per_layer_tokens * 1.0
+        moe_ffn = 0.0
+        n_moe = 0
+    else:
+        n_moe = L if cfg.moe_every == 1 else L // 2
+        n_ffn_dense = 0 if cfg.moe_every == 1 else L // 2
+        ffn = 2 * T * D * F * 3                                    # dense part
+        # top-1: each token through ONE expert of width moe.d_ff + router
+        moe_ffn = 2 * T * D * cfg.moe.d_ff * 3 + 2 * T * D * cfg.moe.n_experts
+    logits = 2 * T * D * V
+    per_layer_qkvo = qkvo  # qkvo above is for all T through ONE layer
+    total = (
+        L * per_layer_qkvo
+        + L * attn
+        + n_ffn_dense * ffn
+        + n_moe * moe_ffn
+        + logits
+    )
+    return {
+        "total": float(total),
+        "qkvo": float(L * per_layer_qkvo),
+        "attn": float(L * attn),
+        "ffn": float(n_ffn_dense * ffn + n_moe * moe_ffn),
+        "logits": float(logits),
+    }
+
+
+def lm_cell_flops(cfg, kind: str, batch: int, seq: int) -> dict:
+    if kind == "train":
+        f = _lm_forward_flops(cfg, batch, seq - 1)
+        mult = 4.0 if cfg.remat else 3.0     # fwd + bwd(2x) [+ remat re-fwd]
+        return {k: v * mult for k, v in f.items()}
+    if kind == "prefill":
+        return _lm_forward_flops(cfg, batch, seq)
+    if kind == "decode":
+        # one token: weights touched for 1 token; attention over kv_len seq
+        f = _lm_forward_flops(cfg, batch, 1, causal=False)
+        attn = 2 * (2 * batch * cfg.n_heads * 1 * seq * cfg.d_head)
+        f["attn"] = float(cfg.n_layers * attn)
+        f["total"] = f["qkvo"] + f["attn"] + f["ffn"] + f["logits"]
+        return f
+    if kind == "retrieval_decode":
+        cs = cfg.retrieval.cluster_size
+        nC = -(-seq // cs)
+        b = cfg.retrieval.top_clusters
+        f = _lm_forward_flops(cfg, batch, 1, causal=False)
+        # centroid scoring + attention over (b+1) gathered clusters
+        attn = 2 * batch * cfg.n_heads * cfg.d_head * (nC + 2 * (b + 1) * cs)
+        f["attn"] = float(cfg.n_layers * attn)
+        f["total"] = f["qkvo"] + f["attn"] + f["ffn"] + f["logits"]
+        return f
+    raise ValueError(kind)
+
+
+def lm_cell_hbm_bytes(cfg, kind: str, batch: int, seq: int) -> float:
+    """Leading-order HBM traffic (global bytes per step).
+
+    Weights stream once per pass from HBM (bf16/f32 per param_dtype);
+    activations: residual stream + attention score blocks; caches for
+    decode. This is a lower-bound style model — fusion-dependent temporaries
+    are excluded — and is reported alongside, never mixed with, HLO bytes.
+    """
+    import jax.numpy as jnp
+
+    pbytes = 2 if cfg.param_dtype == jnp.bfloat16 else 4
+    L, D, F, V = cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.vocab
+    n_params_ffn = (
+        L * 3 * D * F
+        if cfg.moe is None
+        else (L // 2 if cfg.moe_every == 2 else 0) * 3 * D * F
+        + (L if cfg.moe_every == 1 else L // 2) * (cfg.moe.n_experts * 3 * D * cfg.moe.d_ff)
+    )
+    n_params = (
+        V * D * 2
+        + L * (D * (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.d_head + cfg.n_heads * cfg.d_head * D)
+        + n_params_ffn
+    )
+    T = batch * max(seq, 1)
+    act = 2 * T * D  # bf16 residual per layer touchpoint
+    if kind == "train":
+        # fwd + remat re-fwd + bwd weight reads, grads write, opt r/w (f32-ish)
+        weight_traffic = n_params * pbytes * 3 + n_params * (pbytes + 8)
+        act_traffic = L * act * 8  # a handful of reads/writes per layer
+        return float(weight_traffic + act_traffic)
+    if kind == "prefill":
+        return float(n_params * pbytes + L * act * 4 + 2 * L * T * cfg.n_kv_heads * cfg.d_head * 2)
+    if kind == "decode":
+        cache = L * batch * cfg.n_kv_heads * seq * cfg.d_head * 2 * 2
+        return float(n_params * pbytes + cache)  # weights + full cache read
+    if kind == "retrieval_decode":
+        cs = cfg.retrieval.cluster_size
+        nC = -(-seq // cs)
+        b = cfg.retrieval.top_clusters
+        cents = L * batch * cfg.n_kv_heads * nC * cfg.d_head * 4
+        gathered = L * batch * cfg.n_kv_heads * (b + 1) * cs * cfg.d_head * 2 * 2
+        return float(n_params * pbytes + cents + gathered)
+    raise ValueError(kind)
+
+
+# ------------------------------------------------------------------ others
+def gnn_cell_flops(cfg, sh: dict) -> float:
+    d_h = cfg.d_hidden
+    if sh["kind"] == "full_graph":
+        N, E, d_in = sh["n_nodes"], sh["n_edges"], sh["d_feat"]
+        dims = [d_in] + [d_h] * cfg.n_layers
+        per = sum(2 * N * dims[i] * dims[i + 1] * 2 for i in range(cfg.n_layers))
+        gather = sum(E * dims[i] for i in range(cfg.n_layers))  # segment adds
+        return float((per + gather + 2 * N * d_h * cfg.n_classes) * 4)  # train
+    if sh["kind"] == "sampled":
+        B, d_in = sh["batch_nodes"], sh["d_feat"]
+        f1, f2 = sh["fanouts"]
+        n0, n1 = B * f1 * f2, B * f1
+        fl = 2 * (n1 + B) * d_in * d_h * 2 + 2 * B * d_h * d_h * 2
+        return float(fl * 4)
+    if sh["kind"] == "graphs":
+        G, N, E, d_in = sh["batch"], sh["n_nodes"], sh["n_edges"], sh["d_feat"]
+        fl = 2 * G * N * (d_in * d_h * 2 + d_h * d_h * 2) + G * E * d_h
+        return float(fl * 4)
+    raise ValueError(sh["kind"])
+
+
+def recsys_cell_flops(cfg, sh: dict) -> float:
+    d = cfg.embed_dim
+    B = sh.get("batch", 1)
+    mlp_dims = list(cfg.mlp)
+    if cfg.interaction == "cross":
+        x0 = cfg.n_dense + cfg.n_fields * d
+        core = 2 * B * x0 * x0 * cfg.n_cross_layers
+        mlp_in = x0
+    elif cfg.interaction == "self-attn":
+        Fd = cfg.n_fields
+        hd = cfg.n_heads * cfg.d_attn
+        core = cfg.n_blocks * (2 * B * Fd * d * hd * 4 + 2 * B * cfg.n_heads * Fd * Fd * cfg.d_attn * 2)
+        mlp_in = Fd * hd
+    elif cfg.interaction == "transformer-seq":
+        S = cfg.seq_len + 1
+        dm = d * cfg.seq_fields
+        hd = cfg.n_heads * cfg.d_attn
+        core = cfg.n_blocks * (
+            2 * B * S * dm * hd * 4 + 2 * B * cfg.n_heads * S * S * cfg.d_attn * 2
+            + 2 * B * S * dm * 4 * dm * 2
+        )
+        mlp_in = S * dm + (cfg.n_fields - cfg.seq_fields) * d
+    else:  # augru
+        g = cfg.gru_dim
+        sd = d * cfg.seq_fields
+        core = 2 * cfg.seq_len * B * (sd * 3 * g + g * 3 * g) * 2
+        mlp_in = g + (cfg.n_fields - cfg.seq_fields) * d + sd
+    mlp = 0
+    prev = mlp_in
+    for m in mlp_dims:
+        mlp += 2 * B * prev * m
+        prev = m
+    total = core + mlp
+    if sh["kind"] == "train":
+        total *= 4
+    if sh["kind"] == "retrieval":
+        total = 2 * sh["n_candidates"] * d
+    return float(total)
+
+
+def cell_flops(meta: dict, kind: str, sh: dict) -> float:
+    fam = meta["family"]
+    cfg = meta["cfg"]
+    if fam == "lm":
+        return lm_cell_flops(cfg, kind, sh["batch"], sh["seq"])["total"]
+    if fam == "gnn":
+        return gnn_cell_flops(cfg, sh)
+    return recsys_cell_flops(cfg, sh)
+
+
+def cell_hbm_bytes(meta: dict, kind: str, sh: dict) -> float:
+    fam = meta["family"]
+    cfg = meta["cfg"]
+    if fam == "lm":
+        return lm_cell_hbm_bytes(cfg, kind, sh["batch"], sh["seq"])
+    if fam == "gnn":
+        if sh["kind"] == "full_graph":
+            N, E, d = sh["n_nodes"], sh["n_edges"], sh["d_feat"]
+            feats = N * d * 4
+            msgs = E * cfg.d_hidden * 4 * cfg.n_layers
+            return float((feats + msgs + E * 8) * 4)
+        if sh["kind"] == "sampled":
+            B, d = sh["batch_nodes"], sh["d_feat"]
+            f1, f2 = sh["fanouts"]
+            return float(B * f1 * f2 * d * 4 * 4)
+        G, N, d = sh["batch"], sh["n_nodes"], sh["d_feat"]
+        return float(G * N * d * 4 * 4)
+    # recsys: embedding rows touched + dense activations + (train) table grads
+    d = cfg.embed_dim
+    B = sh.get("batch", 1)
+    lookups = B * (cfg.n_fields + 2 * cfg.seq_fields * max(cfg.seq_len, 1)) * d * 4
+    act = B * (cfg.n_dense + cfg.n_fields * d + sum(cfg.mlp)) * 4
+    total = lookups + act
+    if sh["kind"] == "train":
+        total *= 3  # read + grad scatter + adam rows
+    if sh["kind"] == "retrieval":
+        total += sh["n_candidates"] * d * 4
+    return float(total)

@@ -1,0 +1,277 @@
+"""HLO parsing for the roofline: collective bytes from compiled modules.
+
+``compiled.cost_analysis()`` has no collective accounting, so we parse the
+post-SPMD HLO text (per-device shapes) and sum the bytes of every
+  all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Byte accounting per op (wire bytes per participating device):
+  all-gather         result bytes              (device receives the result)
+  all-reduce         2 x result bytes          (ring: reduce-scatter + gather)
+  reduce-scatter     result bytes              (receives its shard; sends ~same)
+  all-to-all         result bytes
+  collective-permute result bytes
+These are the standard ring-algorithm estimates; 'start' variants counted,
+'done' variants skipped (same transfer).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_WEIGHT = {
+    "all-gather": 1.0,
+    "all-reduce": 2.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(\([^=]*?\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\("
+)
+
+# ---------------------------------------------------------------- loop-aware
+# XLA's cost_analysis() (and a naive text scan) counts a while-loop BODY
+# exactly once, but a scanned 88-layer model executes it 88 times. We parse
+# the HLO module into computations, recover each while's trip count from its
+# condition (scan lowers to `compare(iv, constant(N)), direction=LT`), and
+# multiply costs through the call graph (while/call/fusion/conditional).
+
+# computation signatures may contain nested tuple types: greedy match to '->'
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{\s*$")
+_CALLSITE = re.compile(r"(to_apply|body|condition|calls)=%?([\w\.\-]+)")
+_CONSTANT = re.compile(r"%?([\w\.\-]+)\s*=\s*s32\[\]\s*constant\((\d+)\)")
+_COMPARE = re.compile(r"compare\(([^)]*)\).*direction=LT")
+
+
+def _split_computations(hlo_text: str) -> dict:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = _COMP_HDR.match(s)
+        if m and not s.startswith("%constant"):
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if s == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(s)
+    return comps
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    """Recover scan trip count from the while condition computation.
+
+    XLA wraps the `compare(iv, bound), LT` in a kLoop fusion, so the compare
+    op is in a callee — but the s32[] bound constant is materialized in the
+    condition computation itself, which contains nothing else numeric.
+    """
+    consts = []
+    for ln in cond_lines:
+        m = _CONSTANT.search(ln)
+        if m:
+            consts.append(int(m.group(2)))
+    return max(consts) if consts else 1
+
+
+def loop_aware_collective_bytes(hlo_text: str) -> dict:
+    """Collective wire bytes with while-loop trip multiplication.
+
+    Returns {"total_bytes", "by_type", "static_bytes" (once-per-body naive)}.
+    """
+    comps = _split_computations(hlo_text)
+    # map computation -> list of (kind, callee) and local collective bytes
+    local: dict[str, dict] = {}
+    calls: dict[str, list] = {}
+    whiles: dict[str, list] = {}  # comp -> [(body, cond)]
+    for name, lines in comps.items():
+        by_type: dict[str, float] = {}
+        cl, wl = [], []
+        for ln in lines:
+            m = _OP_RE.search(ln)
+            if m and m.group(3) != "-done":
+                b = _shape_bytes(m.group(1)) * _COLL_WEIGHT[m.group(2)]
+                by_type[m.group(2)] = by_type.get(m.group(2), 0) + b
+            if " while(" in ln or "= while(" in ln.replace("  ", " "):
+                body = cond = None
+                for cm in _CALLSITE.finditer(ln):
+                    if cm.group(1) == "body":
+                        body = cm.group(2)
+                    elif cm.group(1) == "condition":
+                        cond = cm.group(2)
+                if body:
+                    wl.append((body, cond))
+            else:
+                for cm in _CALLSITE.finditer(ln):
+                    if cm.group(1) in ("calls", "to_apply"):
+                        cl.append(cm.group(2))
+        local[name] = by_type
+        calls[name] = cl
+        whiles[name] = wl
+
+    memo: dict[str, dict] = {}
+
+    def total(comp: str, depth=0) -> dict:
+        if comp in memo or depth > 50 or comp not in local:
+            return memo.get(comp, {})
+        agg = dict(local[comp])
+        for callee in calls[comp]:
+            for k, v in total(callee, depth + 1).items():
+                agg[k] = agg.get(k, 0) + v
+        for body, cond in whiles[comp]:
+            trips = _trip_count(comps.get(cond, []))
+            for k, v in total(body, depth + 1).items():
+                agg[k] = agg.get(k, 0) + v * trips
+        memo[comp] = agg
+        return agg
+
+    entry = None
+    for name in comps:
+        if name.startswith("main") or ".main" in name or name.endswith("main"):
+            entry = name
+            break
+    if entry is None:  # fall back: the computation with the most lines
+        entry = max(comps, key=lambda n: len(comps[n]))
+    agg = total(entry)
+    naive = collective_stats(hlo_text)
+    return {
+        "total_bytes": int(sum(agg.values())),
+        "by_type": {k: int(v) for k, v in agg.items()},
+        "static_bytes": naive["total_bytes"],
+    }
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Returns {"total_bytes", "by_type": {op: {"count", "bytes"}}}."""
+    by_type: dict = defaultdict(lambda: {"count": 0, "bytes": 0})
+    total = 0.0
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, op, phase = m.group(1), m.group(2), m.group(3)
+        if phase == "-done":
+            continue  # transfer already counted at -start
+        b = _shape_bytes(shape_str) * _COLL_WEIGHT[op]
+        by_type[op]["count"] += 1
+        by_type[op]["bytes"] += int(b)
+        total += b
+    return {"total_bytes": int(total), "by_type": dict(by_type)}
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))
+
+
+def top_collectives(hlo_text: str, n: int = 12) -> list[dict]:
+    """The n largest collectives with their loop-trip multipliers — the
+    hillclimb targeting tool: tells you WHICH tensor's collective to kill."""
+    comps = _split_computations(hlo_text)
+    # computation -> effective trip multiplier (product along call chain)
+    mult: dict[str, float] = {}
+
+    calls: dict[str, list] = {c: [] for c in comps}
+    for name, lines in comps.items():
+        for ln in lines:
+            if "while(" in ln:
+                m = dict(_CALLSITE.findall(ln))
+                body, cond = m.get("body"), m.get("condition")
+                if body:
+                    calls[name].append((body, _trip_count(comps.get(cond, []))))
+                if cond:
+                    calls[name].append((cond, 1))
+            else:
+                for a, b in _CALLSITE.findall(ln):
+                    if a in ("calls", "to_apply"):
+                        calls[name].append((b, 1))
+
+    entry = None
+    for name in comps:
+        if "main" in name:
+            entry = name
+            break
+    if entry is None:
+        entry = max(comps, key=lambda c: len(comps[c]))
+
+    def walk(comp, m):
+        if comp not in comps:
+            return
+        mult[comp] = max(mult.get(comp, 0), m)
+        for callee, trips in calls.get(comp, []):
+            walk(callee, m * trips)
+
+    walk(entry, 1)
+
+    rows = []
+    for name, lines in comps.items():
+        m = mult.get(name, 0)
+        if m == 0:
+            continue
+        for ln in lines:
+            om = _OP_RE.search(ln)
+            if om and om.group(3) != "-done":
+                b = _shape_bytes(om.group(1)) * _COLL_WEIGHT[om.group(2)]
+                meta = re.search(r'op_name="([^"]*)"', ln)
+                rows.append(
+                    {
+                        "bytes_total": int(b * m),
+                        "bytes_once": int(b),
+                        "trips": int(m),
+                        "op": om.group(2),
+                        "shape": om.group(1)[:60],
+                        "where": (meta.group(1)[-90:] if meta else name[:60]),
+                    }
+                )
+    rows.sort(key=lambda r: -r["bytes_total"])
+    return rows[:n]
+
+
+# ----------------------------------------------------------- roofline terms
+# TPU v5e hardware constants (assignment-provided)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (per chip, one direction)
+
+
+def roofline_terms(cost: dict, coll_bytes: int, n_chips: int, *, per_device_hlo: bool = True):
+    """Three roofline terms in seconds.
+
+    cost: compiled.cost_analysis() dict. With SPMD partitioning the compiled
+    module is the PER-DEVICE program, so flops/bytes are per-chip already.
+    coll_bytes: per-device wire bytes from collective_stats.
+    """
+    flops = float(cost.get("flops", 0.0))
+    bytes_ = float(cost.get("bytes accessed", 0.0))
+    if not per_device_hlo:
+        flops /= n_chips
+        bytes_ /= n_chips
+    return {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": bytes_ / HBM_BW,
+        "collective_s": float(coll_bytes) / ICI_BW,
+        "flops_per_chip": flops,
+        "bytes_per_chip": bytes_,
+        "coll_bytes_per_chip": float(coll_bytes),
+    }

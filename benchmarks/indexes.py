@@ -1,0 +1,78 @@
+"""Shared index construction for the table benchmarks — build once, reuse.
+
+Emulates the paper's §5 setup at CPU-tractable scale: one collection, four
+indexes (eCP-FS + IVF + HNSW + Vamana/DiskANN-lite), matched parameters
+(eCP b == IVF nprobe; graph indexes use search complexity ~= k).
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+from dataclasses import dataclass
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import ECPBuildConfig, ECPIndex, BatchedSearcher, build_index, load_packed
+from repro.core.baselines import BruteForce, HNSWLite, IVFIndex, VamanaLite
+
+from .mmir import MMIRDataset, make_dataset
+
+
+@dataclass
+class BenchSuite:
+    ds: MMIRDataset
+    ecp_path: str
+    ecp_build_s: float
+    ivf: IVFIndex
+    ivf_build_s: float
+    hnsw: HNSWLite
+    hnsw_build_s: float
+    vamana: VamanaLite
+    vamana_build_s: float
+    bf: BruteForce
+    params: dict
+
+    def fresh_ecp(self, **kw) -> ECPIndex:
+        return ECPIndex(self.ecp_path, **kw)
+
+
+_SUITE: BenchSuite | None = None
+
+
+def get_suite(*, n_items=20000, dim=32, n_tasks=40, seed=0, workdir=None) -> BenchSuite:
+    global _SUITE
+    if _SUITE is not None:
+        return _SUITE
+    ds = make_dataset(n_items=n_items, dim=dim, n_tasks=n_tasks, seed=seed)
+    workdir = Path(workdir or tempfile.mkdtemp(prefix="ecpfs_bench_"))
+    ecp_path = str(workdir / "ecp_index")
+
+    t0 = time.time()
+    build_index(
+        ds.data, ecp_path,
+        ECPBuildConfig(levels=2, metric="l2", cluster_cap=max(64, n_items // 256)),
+    )
+    ecp_build = time.time() - t0
+
+    n_lists = max(32, n_items // 256)
+    t0 = time.time()
+    ivf = IVFIndex(ds.data, n_lists=n_lists, train_iters=6)
+    ivf_build = time.time() - t0
+
+    t0 = time.time()
+    hnsw = HNSWLite(ds.data, M=12, ef_construction=48)
+    hnsw_build = time.time() - t0
+
+    t0 = time.time()
+    vamana = VamanaLite(ds.data, R=16, L_build=48)
+    vamana_build = time.time() - t0
+
+    _SUITE = BenchSuite(
+        ds=ds, ecp_path=ecp_path, ecp_build_s=ecp_build,
+        ivf=ivf, ivf_build_s=ivf_build, hnsw=hnsw, hnsw_build_s=hnsw_build,
+        vamana=vamana, vamana_build_s=vamana_build, bf=BruteForce(ds.data),
+        params={"b": 16, "nprobe": 16, "ef": 100, "complexity": 100, "k": 100},
+    )
+    return _SUITE

@@ -1,0 +1,102 @@
+"""Roofline table: read dry-run records, derive the three terms, the
+MODEL_FLOPS / HLO_FLOPs utilization ratio, and the bottleneck per cell."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .hlo_analysis import HBM_BW, ICI_BW, PEAK_FLOPS
+
+RESULTS = Path(__file__).parent / "results"
+
+
+def set_results_dir(path) -> None:
+    global RESULTS
+    RESULTS = Path(path)
+
+
+def model_flops(rec: dict) -> float:
+    """6·N·D for train (D = tokens), 2·N_active·D for inference-like steps."""
+    n = rec.get("n_params", 0)
+    toks = rec.get("tokens", 0) or 0
+    arch, kind = rec["arch"], rec["kind"]
+    act = n
+    if "maverick" in arch:          # 400B total / ~17B active
+        act = 17e9
+    elif "scout" in arch:           # 109B total / ~17B active
+        act = 17e9
+    if kind == "train":
+        return 6.0 * act * toks
+    if kind in ("prefill", "decode", "retrieval_decode", "serve"):
+        return 2.0 * act * max(toks, 1)
+    if kind == "retrieval":
+        return 2.0 * rec.get("n_candidates", 0) * 16  # dot-scoring
+    return 0.0
+
+
+_META_CACHE: dict = {}
+
+
+def _cell_meta(arch: str, shape: str) -> dict:
+    """tokens / n_candidates for records written before meta was embedded."""
+    key = (arch, shape)
+    if key not in _META_CACHE:
+        try:
+            from repro.launch.cells import build_cell
+
+            cell = build_cell(arch, shape, mesh_axes=("data", "model"))
+            _META_CACHE[key] = {
+                "tokens": int(cell.meta.get("tokens", 0)),
+                "n_candidates": int(cell.meta.get("n_candidates", 0)),
+            }
+        except Exception:
+            _META_CACHE[key] = {}
+    return _META_CACHE[key]
+
+
+def load_records(mesh_tag: str = "single") -> list[dict]:
+    recs = []
+    for fp in sorted(RESULTS.glob(f"dryrun_{mesh_tag}_*.json")):
+        rec = json.loads(fp.read_text())
+        if "tokens" not in rec:
+            rec.update(_cell_meta(rec["arch"], rec["shape"]))
+        recs.append(rec)
+    return recs
+
+
+def summarize(mesh_tag: str = "single") -> list[dict]:
+    rows = []
+    for rec in load_records(mesh_tag):
+        n_chips = rec["n_chips"]
+        mf = model_flops(rec)
+        hlo_total = rec["flops_per_chip"] * n_chips
+        util = mf / hlo_total if hlo_total else 0.0
+        dom = rec["bottleneck"]
+        t_dom = rec[f"{dom}_s" if dom != "compute" else "compute_s"]
+        rows.append(
+            {
+                "arch": rec["arch"],
+                "shape": rec["shape"],
+                "mesh": rec["mesh"],
+                "T_comp_s": f"{rec['compute_s']:.3e}",
+                "T_mem_s": f"{rec['memory_s']:.3e}",
+                "T_coll_s": f"{rec['collective_s']:.3e}",
+                "bottleneck": dom,
+                "model_flops": f"{mf:.3e}",
+                "useful_ratio": round(util, 3),
+                "hbm_GiB": round(rec["peak_hbm_adjusted"] / 2**30, 2),
+                "compile_s": rec["compile_s"],
+            }
+        )
+    return rows
+
+
+def print_table(mesh_tag: str = "single") -> None:
+    rows = summarize(mesh_tag)
+    if not rows:
+        print(f"(no dry-run records for mesh={mesh_tag}; run repro.launch.dryrun)")
+        return
+    cols = list(rows[0].keys())
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r[c]) for c in cols))

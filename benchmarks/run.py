@@ -1,0 +1,77 @@
+"""Benchmark entry point — one section per paper table + roofline summary.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Emits, per the harness contract, ``name,us_per_call,derived`` CSV lines in
+the SUMMARY section (latencies from the tables; derived = context such as
+tasks solved or speedup), after printing each table in full.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _print_table(title: str, rows: list[dict]) -> None:
+    print(f"\n=== {title} ===")
+    if not rows:
+        print("(empty)")
+        return
+    cols = list(rows[0].keys())
+    widths = {c: max(len(c), *(len(str(r.get(c, ''))) for r in rows)) for c in cols}
+    print("  ".join(c.ljust(widths[c]) for c in cols))
+    for r in rows:
+        print("  ".join(str(r.get(c, "")).ljust(widths[c]) for c in cols))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="smaller dataset / fewer runs")
+    ap.add_argument("--n-items", type=int, default=None)
+    args = ap.parse_args()
+
+    from . import indexes, roofline, table2_single_query, table3_tasks, table4_incremental
+
+    n_items = args.n_items or (6000 if args.fast else 20000)
+    runs = 2 if args.fast else 4
+    t0 = time.time()
+    suite = indexes.get_suite(n_items=n_items, dim=32, n_tasks=24 if args.fast else 40)
+    print(
+        f"[bench] suite: {len(suite.ds.data)} items, {len(suite.ds.tasks)} tasks; "
+        f"builds: eCP {suite.ecp_build_s:.1f}s IVF {suite.ivf_build_s:.1f}s "
+        f"HNSW {suite.hnsw_build_s:.1f}s Vamana {suite.vamana_build_s:.1f}s "
+        f"(total {time.time()-t0:.1f}s)"
+    )
+
+    t2 = table2_single_query.run(runs=runs)
+    _print_table("Table 2 — load time + single-query latency (disk/memory) + workload", t2)
+
+    t3 = table3_tasks.run()
+    _print_table("Table 3 — tasks completed (target in top-100) + recall@100", t3)
+
+    t4 = table4_incremental.run(rounds=10, runs=max(2, runs // 2))
+    _print_table("Table 4 — incremental workload: top-100 then 10 x '100 more'", t4)
+
+    print("\n=== Roofline (single-pod 16x16, from dry-run artifacts) ===")
+    roofline.print_table("single")
+    print("\n=== Roofline (multi-pod 2x16x16) ===")
+    roofline.print_table("multi")
+
+    # ----------------------------------------------------------- summary CSV
+    print("\nname,us_per_call,derived")
+    for r in t2:
+        print(f"table2/{r['index']}/mem,{r['lat_mem_s']*1e6:.1f},disk_us={r['lat_disk_s']*1e6:.1f}")
+    for r in t3:
+        print(f"table3/{r['index']},0,tasks={r['tasks']};recall={r['recall@100']}")
+    ecp_wl = next(r for r in t4 if r["index"] == "eCP-FS")["workload_s"]
+    for r in t4:
+        sp = r["workload_s"] / ecp_wl if ecp_wl else 0.0
+        print(
+            f"table4/{r['index']},{r['lat_mem_s']*1e6:.1f},workload_s={r['workload_s']};vs_ecp={sp:.1f}x"
+        )
+    sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Table 3: tasks completed per index (1 ground-truth item in top-100 for
+any of the task's queries) — plus recall@100 vs exact search."""
+from __future__ import annotations
+
+import numpy as np
+
+from .indexes import get_suite
+
+
+def run() -> list[dict]:
+    s = get_suite()
+    p = s.params
+    ecp = s.fresh_ecp()
+
+    def ecp_search(q, k):
+        res, qid = ecp.new_search(q, k, b=p["b"])
+        ecp.drop_query(qid)
+        return None, np.asarray([i for _, i in res])
+
+    searchers = {
+        "eCP-FS": ecp_search,
+        "IVF": lambda q, k: s.ivf.search(q, k, nprobe=p["nprobe"]),
+        "HNSW": lambda q, k: s.hnsw.search(q, k, ef=p["ef"]),
+        "DiskANN-lite": lambda q, k: s.vamana.search(q, k, complexity=p["complexity"]),
+    }
+    rows = []
+    for name, fn in searchers.items():
+        solved = 0
+        recalls = []
+        for t in s.ds.tasks:
+            ok = False
+            for q in t.queries:
+                _, ids = fn(q, p["k"])
+                ids = set(np.asarray(ids).reshape(-1).tolist())
+                gt = set(s.bf.search(q, p["k"])[1].tolist())
+                recalls.append(len(ids & gt) / p["k"])
+                ok = ok or (t.target in ids)
+            solved += int(ok)
+        rows.append(
+            {
+                "index": name,
+                "tasks": f"{solved}/{len(s.ds.tasks)}",
+                "recall@100": round(float(np.mean(recalls)), 4),
+            }
+        )
+    return rows

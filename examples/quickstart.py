@@ -1,0 +1,43 @@
+"""Quickstart: build an eCP-FS index, search it, resume the search, and —
+the paper's point — read the index with nothing but ls/cat.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import json
+import pathlib
+import tempfile
+
+import numpy as np
+
+from repro.core import ECPBuildConfig, ECPIndex, build_index
+from repro.data import clustered_vectors
+
+with tempfile.TemporaryDirectory() as td:
+    path = pathlib.Path(td) / "my_index"
+
+    # 1) data: 50k CLIP-like embeddings (clustered unit vectors)
+    data, _ = clustered_vectors(0, n=50_000, dim=128, n_clusters=256)
+
+    # 2) build: C=200 vectors/cluster, L=2, l2 metric -> transparent files
+    build_index(data, str(path), ECPBuildConfig(levels=2, cluster_cap=200, metric="l2"))
+
+    # 3) the index IS a file structure (paper Fig. 1)
+    info = json.loads((path / "info" / ".zattrs").read_text())
+    print("info/.zattrs:", info)
+    print("top-level entries:", sorted(p.name for p in path.iterdir())[:8])
+    node0 = path / "lvl_2" / "node_00000000"
+    meta = json.loads((node0 / "embeddings" / ".zarray").read_text())
+    print("first cluster on disk:", meta["shape"], meta["dtype"], "raw chunks:",
+          sorted(p.name for p in (node0 / "embeddings").iterdir() if not p.name.startswith(".")))
+
+    # 4) search with a bounded memory footprint (LRU over 32 nodes)
+    index = ECPIndex(str(path), cache_max_nodes=32)
+    q = data[1234] + 0.01 * np.random.default_rng(1).normal(size=128).astype(np.float32)
+    results, qid = index.new_search(q, k=10, b=8)
+    print("\ntop-10:", [(round(d, 3), i) for d, i in results])
+
+    # 5) incremental: 10 more WITHOUT re-searching (query state + T queue)
+    more = index.get_next_k(qid, 10)
+    print("next-10:", [(round(d, 3), i) for d, i in more])
+    print("stats:", index.QS[qid].stats)
+    print("cache resident nodes:", index.cache.n_resident, "(bound 32)")

@@ -1,0 +1,3 @@
+from .checkpoint import CheckpointManager, load_tree, save_tree
+
+__all__ = ["CheckpointManager", "load_tree", "save_tree"]

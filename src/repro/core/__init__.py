@@ -1,0 +1,33 @@
+"""eCP-FS core: the paper's contribution as a composable library.
+
+Public API:
+  build_index / ECPBuildConfig     — top-down index construction (build.py)
+  ECPIndex                         — file-structure retrieval with LRU cache
+                                     and incremental search (search.py)
+  BatchedSearcher                  — TPU-native batched beam search (batched.py)
+  FStore                           — the transparent zarr-v2 file store
+  load_packed / PackedIndex        — dense device view of the hierarchy
+  baselines                        — BruteForce / IVF / HNSWLite / VamanaLite
+"""
+from .build import ECPBuildConfig, build_index
+from .batched import BatchedQueryState, BatchedSearcher
+from .fstore import FStore
+from .layout import IndexInfo, derive_shape
+from .packed import PackedIndex, load_packed
+from .search import ECPIndex, NodeCache, QueryState, SearchStats
+
+__all__ = [
+    "ECPBuildConfig",
+    "build_index",
+    "BatchedQueryState",
+    "BatchedSearcher",
+    "FStore",
+    "IndexInfo",
+    "derive_shape",
+    "PackedIndex",
+    "load_packed",
+    "ECPIndex",
+    "NodeCache",
+    "QueryState",
+    "SearchStats",
+]

@@ -1,0 +1,196 @@
+"""TPU-native batched eCP search (level-synchronous beam + resumable state).
+
+The paper's single-query priority queue is inherently sequential; the TPU
+adaptation (DESIGN.md §3) restores eCP's per-level synchronization so a
+whole query batch advances level-by-level with dense, MXU-friendly distance
+blocks and ``lax.top_k`` selections:
+
+  1. score the root centroids, take the best ``b`` lvl_1 nodes;
+  2. per internal level: gather children centroid blocks, score, re-top-b;
+  3. at the last internal level, *rank* every candidate leaf (not just the
+     top-b) — this ranking is the device analogue of the priority queue and
+     is what makes the search resumable;
+  4. scan ``b`` leaves at a time, merging scanned items into a bounded,
+     sorted candidate buffer per query.
+
+``BatchedQueryState`` is a pytree: (leaf ranking, visit pointer, candidate
+buffer). ``next_k`` emits the best ``k`` unseen items and advances the
+state — the batched equivalent of Algorithm 2. Exhausting the ranked leaf
+list mirrors the paper's T-queue running empty.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .distances import jnp_distances
+from .packed import PackedIndex
+
+__all__ = ["BatchedQueryState", "BatchedSearcher"]
+
+_INF = jnp.float32(jnp.inf)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class BatchedQueryState:
+    leaf_rank: jnp.ndarray    # [B, R] int32 leaf ids in visit order (-1 pad)
+    leaf_rank_d: jnp.ndarray  # [B, R] centroid distance of each ranked leaf
+    next_ptr: jnp.ndarray     # [B] int32 next rank position to visit
+    buf_d: jnp.ndarray        # [B, C] sorted candidate distances (+inf pad)
+    buf_i: jnp.ndarray        # [B, C] candidate item ids (-1 pad)
+
+    def tree_flatten(self):
+        return (self.leaf_rank, self.leaf_rank_d, self.next_ptr, self.buf_d, self.buf_i), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def _ascending_top_k(d, ids, k):
+    """Smallest-k by distance; returns (d_k, ids_k) ascending."""
+    neg, idx = jax.lax.top_k(-d, k)
+    return -neg, jnp.take_along_axis(ids, idx, axis=-1)
+
+
+class BatchedSearcher:
+    """Device-resident packed index + jitted search stages."""
+
+    def __init__(self, packed: PackedIndex, *, scorer=None):
+        self.info = packed.info
+        self.metric = packed.info.metric
+        self.root = jnp.asarray(packed.root_emb)
+        self.int_emb = [jnp.asarray(p.emb) for p in packed.levels[:-1]]
+        self.int_ids = [jnp.asarray(p.ids) for p in packed.levels[:-1]]
+        self.int_mask = [jnp.asarray(p.mask) for p in packed.levels[:-1]]
+        leaf = packed.leaf
+        self.leaf_emb = jnp.asarray(leaf.emb)
+        self.leaf_ids = jnp.asarray(leaf.ids)
+        self.leaf_mask = jnp.asarray(leaf.mask)
+        # scorer(q[B,D], c[B,N,D]) -> [B,N] distances; pluggable so the
+        # Pallas distance kernel can be swapped in (kernels/distance_topk).
+        self._scorer = scorer
+
+    # ---------------------------------------------------------------- util
+    def _score(self, q, c):
+        if self._scorer is not None:
+            return self._scorer(q, c)
+        return jnp_distances(q[:, None, :], c, self.metric)[:, 0, :] if c.ndim == 3 else jnp_distances(q, c, self.metric)
+
+    # ------------------------------------------------------------- stage 1
+    @partial(jax.jit, static_argnames=("self", "b_internal"))
+    def rank_leaves(self, q: jnp.ndarray, b_internal: int):
+        """[B, D] queries -> ranked candidate leaves [B, R] (+ distances)."""
+        B = q.shape[0]
+        d = jnp_distances(q, self.root, self.metric)           # [B, n1]
+        n1 = d.shape[-1]
+        if not self.int_emb:  # L == 1: root children are the leaves
+            order = jnp.argsort(d, axis=-1)
+            return order.astype(jnp.int32), jnp.take_along_axis(d, order, axis=-1)
+        b = min(b_internal, n1)
+        node_d, node = _ascending_top_k(d, jnp.broadcast_to(jnp.arange(n1, dtype=jnp.int32), d.shape), b)
+        for li, (emb, ids, mask) in enumerate(zip(self.int_emb, self.int_ids, self.int_mask)):
+            ce = emb[node]                                      # [B, b, maxc, D]
+            cd = jnp_distances(q[:, None, None, :], ce, self.metric)[:, :, 0, :]  # [B, b, maxc]
+            cm = mask[node]
+            cd = jnp.where(cm, cd, _INF)
+            cid = jnp.where(cm, ids[node], -1)
+            flat_d = cd.reshape(B, -1)
+            flat_i = cid.reshape(B, -1)
+            is_last = li == len(self.int_emb) - 1
+            if is_last:
+                order = jnp.argsort(flat_d, axis=-1)            # rank ALL leaves seen
+                return (
+                    jnp.take_along_axis(flat_i, order, axis=-1).astype(jnp.int32),
+                    jnp.take_along_axis(flat_d, order, axis=-1),
+                )
+            bb = min(b_internal, flat_d.shape[-1])
+            node_d, node = _ascending_top_k(flat_d, flat_i, bb)
+            node = jnp.maximum(node, 0)                        # guard -1 pads
+        raise AssertionError("unreachable")
+
+    # ------------------------------------------------------------- stage 2
+    @partial(jax.jit, static_argnames=("self", "b"))
+    def _scan_chunk(self, q, state: BatchedQueryState, b: int):
+        """Visit the next ``b`` ranked leaves; merge items into the buffer."""
+        B = q.shape[0]
+        R = state.leaf_rank.shape[1]
+        pos = state.next_ptr[:, None] + jnp.arange(b)[None, :]          # [B, b]
+        valid = pos < R
+        pos_c = jnp.minimum(pos, R - 1)
+        leaf = jnp.take_along_axis(state.leaf_rank, pos_c, axis=-1)     # [B, b]
+        lvalid = valid & (leaf >= 0)
+        leaf_c = jnp.maximum(leaf, 0)
+        emb = self.leaf_emb[leaf_c]                                     # [B, b, cap, D]
+        ids = self.leaf_ids[leaf_c]                                     # [B, b, cap]
+        mask = self.leaf_mask[leaf_c] & lvalid[..., None]
+        cap = emb.shape[2]
+        d = self._score(q, emb.reshape(B, b * cap, -1))                  # [B, b*cap]
+        d = jnp.where(mask.reshape(B, -1), d, _INF)
+        i = jnp.where(mask.reshape(B, -1), ids.reshape(B, -1), -1)
+        # merge with buffer, re-sort, keep best C
+        C = state.buf_d.shape[1]
+        all_d = jnp.concatenate([state.buf_d, d], axis=-1)
+        all_i = jnp.concatenate([state.buf_i, i], axis=-1)
+        buf_d, buf_i = _ascending_top_k(all_d, all_i, C)
+        return BatchedQueryState(
+            leaf_rank=state.leaf_rank,
+            leaf_rank_d=state.leaf_rank_d,
+            next_ptr=state.next_ptr + b,
+            buf_d=buf_d,
+            buf_i=buf_i,
+        )
+
+    @partial(jax.jit, static_argnames=("self", "k"))
+    def _emit(self, state: BatchedQueryState, k: int):
+        out_d = state.buf_d[:, :k]
+        out_i = state.buf_i[:, :k]
+        C = state.buf_d.shape[1]
+        rem_d = jnp.concatenate([state.buf_d[:, k:], jnp.full((state.buf_d.shape[0], k), _INF)], axis=-1)
+        rem_i = jnp.concatenate([state.buf_i[:, k:], jnp.full((state.buf_i.shape[0], k), -1, jnp.int32)], axis=-1)
+        new = BatchedQueryState(state.leaf_rank, state.leaf_rank_d, state.next_ptr, rem_d[:, :C], rem_i[:, :C])
+        return out_d, out_i, new
+
+    # ---------------------------------------------------------------- API
+    def search(
+        self,
+        q: jnp.ndarray,
+        k: int = 100,
+        *,
+        b: int = 8,
+        b_internal: int | None = None,
+        buffer_cap: int | None = None,
+    ):
+        """New batched search. Returns (dists [B,k], ids [B,k], state)."""
+        q = jnp.asarray(q, jnp.float32)
+        B = q.shape[0]
+        bi = b_internal if b_internal is not None else max(b, 8)
+        leaf_rank, leaf_rank_d = self.rank_leaves(q, bi)
+        C = buffer_cap if buffer_cap is not None else max(4 * k, 256)
+        state = BatchedQueryState(
+            leaf_rank=leaf_rank,
+            leaf_rank_d=leaf_rank_d,
+            next_ptr=jnp.zeros((B,), jnp.int32),
+            buf_d=jnp.full((B, C), _INF),
+            buf_i=jnp.full((B, C), -1, jnp.int32),
+        )
+        state = self._scan_chunk(q, state, min(b, leaf_rank.shape[1]))
+        return self.next_k(q, state, k, b=b)
+
+    def next_k(self, q: jnp.ndarray, state: BatchedQueryState, k: int, *, b: int = 8):
+        """Emit the next k items, scanning further leaves if needed."""
+        q = jnp.asarray(q, jnp.float32)
+        R = state.leaf_rank.shape[1]
+        # scan until every query has k buffered candidates or leaves exhaust
+        for _ in range(64):  # hard bound; python loop keeps jit graphs small
+            have = jnp.sum(jnp.isfinite(state.buf_d[:, :k]), axis=-1)
+            exhausted = state.next_ptr >= R
+            if bool(jnp.all((have >= k) | exhausted)):
+                break
+            state = self._scan_chunk(q, state, min(b, R))
+        return self._emit(state, k)

@@ -1,0 +1,57 @@
+"""Distance computations shared by build, search, and the kernels' reference.
+
+All metrics are *distances*: smaller is better.
+  l2      : squared euclidean  ||q - c||^2
+  ip      : negative inner product  -<q, c>
+  cosine  : 1 - cos(q, c)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+METRICS = ("l2", "ip", "cosine")
+
+
+def _check(metric: str) -> None:
+    if metric not in METRICS:
+        raise ValueError(f"unknown metric {metric!r}; one of {METRICS}")
+
+
+# ------------------------------------------------------------------ numpy
+def np_distances(q: np.ndarray, c: np.ndarray, metric: str) -> np.ndarray:
+    """q: [B, D] or [D]; c: [N, D] -> [B, N] or [N] float32 distances."""
+    _check(metric)
+    q = np.asarray(q, np.float32)
+    c = np.asarray(c, np.float32)
+    squeeze = q.ndim == 1
+    if squeeze:
+        q = q[None]
+    if metric == "ip":
+        d = -(q @ c.T)
+    elif metric == "l2":
+        qn = (q * q).sum(-1, keepdims=True)
+        cn = (c * c).sum(-1)[None, :]
+        d = qn + cn - 2.0 * (q @ c.T)
+    else:  # cosine
+        qn = q / np.maximum(np.linalg.norm(q, axis=-1, keepdims=True), 1e-12)
+        cn = c / np.maximum(np.linalg.norm(c, axis=-1, keepdims=True), 1e-12)
+        d = 1.0 - qn @ cn.T
+    return d[0] if squeeze else d
+
+
+# ------------------------------------------------------------------ jax
+def jnp_distances(q, c, metric: str):
+    """q: [..., B, D]; c: [..., N, D] -> [..., B, N] distances (f32 accum)."""
+    _check(metric)
+    q = q.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    if metric == "ip":
+        return -jnp.einsum("...bd,...nd->...bn", q, c)
+    if metric == "l2":
+        qn = jnp.sum(q * q, axis=-1)[..., :, None]
+        cn = jnp.sum(c * c, axis=-1)[..., None, :]
+        return qn + cn - 2.0 * jnp.einsum("...bd,...nd->...bn", q, c)
+    qn = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-12)
+    cn = c / jnp.maximum(jnp.linalg.norm(c, axis=-1, keepdims=True), 1e-12)
+    return 1.0 - jnp.einsum("...bd,...nd->...bn", qn, cn)

@@ -1,0 +1,219 @@
+"""fstore — a minimal, zero-dependency, zarr-v2-compatible file structure.
+
+The paper's point is that the index *is* a file structure: every node is a
+directory, every array a set of raw chunk files plus JSON metadata, so the
+index is readable from any language (and by humans with ``ls`` + ``xxd``).
+Zarr itself is not installed in this environment, so we implement the v2
+on-disk layout directly:
+
+  group/            .zgroup   -> {"zarr_format": 2}
+                    .zattrs   -> arbitrary JSON attributes
+  array/            .zarray   -> shape/chunks/dtype/order metadata, compressor
+                                 null (raw little-endian C-order bytes)
+                    0.0, 1.0  -> chunk files (row-major chunk grid indices)
+
+Arrays written here are readable by the real ``zarr`` library and vice versa
+(for compressor=None arrays), which preserves the paper's language-agnostic
+claim. Only the features the index needs are implemented: C-order raw chunks,
+chunking along the leading axis, partial (chunk-aligned) reads.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Iterator
+
+import numpy as np
+
+__all__ = ["FStore", "dtype_to_zarr", "zarr_to_dtype"]
+
+_ENDIAN = "<"  # little-endian on disk, always
+
+
+def dtype_to_zarr(dt: np.dtype) -> str:
+    dt = np.dtype(dt)
+    kind = dt.kind
+    if kind not in "fiub":
+        raise TypeError(f"unsupported dtype for fstore: {dt}")
+    if kind == "b":
+        return "|b1"
+    return f"{_ENDIAN}{kind}{dt.itemsize}"
+
+
+def zarr_to_dtype(s: str) -> np.dtype:
+    return np.dtype(s)
+
+
+class FStore:
+    """A root directory acting as a zarr-v2 style hierarchical store."""
+
+    def __init__(self, root: str | os.PathLike, *, create: bool = False):
+        self.root = Path(root)
+        if create:
+            self.root.mkdir(parents=True, exist_ok=True)
+            self._write_json(self.root / ".zgroup", {"zarr_format": 2})
+        if not self.root.is_dir():
+            raise FileNotFoundError(f"fstore root does not exist: {self.root}")
+        self._lock = threading.Lock()
+
+    # ---------------------------------------------------------------- paths
+    def _p(self, path: str) -> Path:
+        p = (self.root / path).resolve()
+        if self.root.resolve() not in p.parents and p != self.root.resolve():
+            raise ValueError(f"path escapes store root: {path}")
+        return p
+
+    def exists(self, path: str) -> bool:
+        return self._p(path).exists()
+
+    def is_array(self, path: str) -> bool:
+        return (self._p(path) / ".zarray").exists()
+
+    def is_group(self, path: str) -> bool:
+        return (self._p(path) / ".zgroup").exists()
+
+    def listdir(self, path: str = "") -> list[str]:
+        p = self._p(path)
+        if not p.is_dir():
+            return []
+        return sorted(c.name for c in p.iterdir() if not c.name.startswith("."))
+
+    def walk_arrays(self, path: str = "") -> Iterator[str]:
+        base = self._p(path)
+        for dirpath, dirnames, filenames in os.walk(base):
+            if ".zarray" in filenames:
+                yield str(Path(dirpath).relative_to(self.root))
+                dirnames.clear()
+
+    def delete(self, path: str) -> None:
+        p = self._p(path)
+        if p.exists():
+            shutil.rmtree(p)
+
+    # ---------------------------------------------------------------- json
+    @staticmethod
+    def _write_json(p: Path, obj: Any) -> None:
+        tmp = p.with_suffix(p.suffix + ".tmp")
+        tmp.write_text(json.dumps(obj, indent=2, sort_keys=True))
+        os.replace(tmp, p)
+
+    @staticmethod
+    def _read_json(p: Path) -> Any:
+        return json.loads(p.read_text())
+
+    # ---------------------------------------------------------------- groups
+    def create_group(self, path: str, attrs: dict | None = None) -> None:
+        p = self._p(path)
+        p.mkdir(parents=True, exist_ok=True)
+        self._write_json(p / ".zgroup", {"zarr_format": 2})
+        if attrs:
+            self.write_attrs(path, attrs)
+
+    def write_attrs(self, path: str, attrs: dict) -> None:
+        p = self._p(path)
+        p.mkdir(parents=True, exist_ok=True)
+        self._write_json(p / ".zattrs", attrs)
+
+    def read_attrs(self, path: str) -> dict:
+        p = self._p(path) / ".zattrs"
+        if not p.exists():
+            return {}
+        return self._read_json(p)
+
+    # ---------------------------------------------------------------- arrays
+    def write_array(
+        self,
+        path: str,
+        arr: np.ndarray,
+        *,
+        chunk_rows: int | None = None,
+        attrs: dict | None = None,
+    ) -> None:
+        """Write ``arr`` as a raw-chunked zarr-v2 array (chunked on axis 0)."""
+        arr = np.ascontiguousarray(arr)
+        p = self._p(path)
+        p.mkdir(parents=True, exist_ok=True)
+        shape = list(arr.shape) if arr.ndim else [1]
+        data = arr.reshape(shape)
+        rows = shape[0]
+        cr = rows if chunk_rows is None else max(1, min(int(chunk_rows), max(rows, 1)))
+        if rows == 0:
+            cr = 1
+        chunks = [cr] + shape[1:]
+        meta = {
+            "zarr_format": 2,
+            "shape": shape,
+            "chunks": chunks,
+            "dtype": dtype_to_zarr(data.dtype),
+            "compressor": None,
+            "fill_value": 0,
+            "order": "C",
+            "filters": None,
+        }
+        self._write_json(p / ".zarray", meta)
+        if attrs:
+            self._write_json(p / ".zattrs", attrs)
+        n_chunks = max(1, -(-rows // cr))
+        trailing_zeros = ".".join(["0"] * (len(shape) - 1))
+        for ci in range(n_chunks):
+            lo, hi = ci * cr, min((ci + 1) * cr, rows)
+            block = data[lo:hi]
+            if block.shape[0] < cr:  # zarr pads the final chunk to full size
+                pad = np.zeros((cr - block.shape[0],) + block.shape[1:], data.dtype)
+                block = np.concatenate([block, pad], axis=0)
+            name = str(ci) if not trailing_zeros else f"{ci}.{trailing_zeros}"
+            tmp = p / (name + ".tmp")
+            tmp.write_bytes(np.ascontiguousarray(block).tobytes())
+            os.replace(tmp, p / name)
+
+    def array_meta(self, path: str) -> dict:
+        return self._read_json(self._p(path) / ".zarray")
+
+    def read_array(self, path: str) -> np.ndarray:
+        meta = self.array_meta(path)
+        shape = meta["shape"]
+        chunks = meta["chunks"]
+        dt = zarr_to_dtype(meta["dtype"])
+        rows, cr = shape[0], chunks[0]
+        n_chunks = max(1, -(-rows // cr))
+        p = self._p(path)
+        trailing_zeros = ".".join(["0"] * (len(shape) - 1))
+        parts = []
+        for ci in range(n_chunks):
+            name = str(ci) if not trailing_zeros else f"{ci}.{trailing_zeros}"
+            raw = (p / name).read_bytes()
+            block = np.frombuffer(raw, dtype=dt).reshape([cr] + shape[1:])
+            parts.append(block)
+        out = np.concatenate(parts, axis=0)[:rows] if parts else np.zeros(shape, dt)
+        return np.ascontiguousarray(out.reshape(shape))
+
+    def read_rows(self, path: str, lo: int, hi: int) -> np.ndarray:
+        """Partial read: only the chunks covering rows [lo, hi)."""
+        meta = self.array_meta(path)
+        shape, chunks = meta["shape"], meta["chunks"]
+        dt = zarr_to_dtype(meta["dtype"])
+        cr = chunks[0]
+        hi = min(hi, shape[0])
+        if hi <= lo:
+            return np.zeros([0] + shape[1:], dt)
+        c_lo, c_hi = lo // cr, -(-hi // cr)
+        p = self._p(path)
+        trailing_zeros = ".".join(["0"] * (len(shape) - 1))
+        parts = []
+        for ci in range(c_lo, c_hi):
+            name = str(ci) if not trailing_zeros else f"{ci}.{trailing_zeros}"
+            raw = (p / name).read_bytes()
+            parts.append(np.frombuffer(raw, dtype=dt).reshape([cr] + shape[1:]))
+        block = np.concatenate(parts, axis=0)
+        return np.ascontiguousarray(block[lo - c_lo * cr : hi - c_lo * cr])
+
+    def array_nbytes(self, path: str) -> int:
+        meta = self.array_meta(path)
+        dt = zarr_to_dtype(meta["dtype"])
+        n = 1
+        for s in meta["shape"]:
+            n *= s
+        return n * dt.itemsize

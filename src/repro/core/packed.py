@@ -1,0 +1,92 @@
+"""Packed (dense, device-shardable) view of the index hierarchy.
+
+The file structure is the source of truth; for TPU-batched traversal we pack
+each level's children lists into rectangular arrays:
+
+  emb  [n_nodes, max_children, D]  float32 (padded with +inf-distance rows)
+  ids  [n_nodes, max_children]     int32   (padded with -1)
+  mask [n_nodes, max_children]     bool
+
+Internal-level ids are child node indices at the next level; leaf-level ids
+are item ids. Padding rows are zero vectors with mask False — search code
+masks distances to +inf before any top-k.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from . import layout
+from .fstore import FStore
+
+
+@dataclass
+class PackedLevel:
+    emb: np.ndarray   # [n_nodes, max_children, D] float32
+    ids: np.ndarray   # [n_nodes, max_children] int32
+    mask: np.ndarray  # [n_nodes, max_children] bool
+
+    @property
+    def n_nodes(self) -> int:
+        return self.emb.shape[0]
+
+    @property
+    def max_children(self) -> int:
+        return self.emb.shape[1]
+
+
+def pack_children(
+    emb_lists: list[np.ndarray],
+    id_lists: list[np.ndarray],
+    dim: int,
+    *,
+    pad_multiple: int = 8,
+) -> PackedLevel:
+    """Pack per-node ragged children into a PackedLevel."""
+    n_nodes = len(emb_lists)
+    max_c = max((len(x) for x in id_lists), default=1)
+    max_c = max(1, -(-max_c // pad_multiple) * pad_multiple)
+    emb = np.zeros((n_nodes, max_c, dim), np.float32)
+    ids = np.full((n_nodes, max_c), -1, np.int32)
+    mask = np.zeros((n_nodes, max_c), bool)
+    for j, (e, i) in enumerate(zip(emb_lists, id_lists)):
+        n = len(i)
+        if n:
+            emb[j, :n] = np.asarray(e, np.float32)
+            ids[j, :n] = np.asarray(i, np.int32)
+            mask[j, :n] = True
+    return PackedLevel(emb, ids, mask)
+
+
+@dataclass
+class PackedIndex:
+    """Root centroids + one PackedLevel per lvl_1..lvl_L."""
+
+    info: "layout.IndexInfo"
+    root_emb: np.ndarray            # [n_1, D] float32
+    levels: list[PackedLevel]       # levels[i] = children of lvl_{i+1} nodes
+
+    @property
+    def leaf(self) -> PackedLevel:
+        return self.levels[-1]
+
+
+def load_packed(store: FStore, *, max_leaf_pad: int = 8) -> PackedIndex:
+    """Read the whole file structure into a PackedIndex (for device search)."""
+    info = layout.IndexInfo.from_attrs(store.read_attrs(layout.INFO))
+    root_emb = store.read_array(f"{layout.ROOT}/{layout.EMB}").astype(np.float32)
+    levels = []
+    for lv in range(1, info.levels + 1):
+        n_nodes = info.nodes_per_level[lv - 1]
+        emb_lists, id_lists = [], []
+        for j in range(n_nodes):
+            g = layout.node_group(lv, j)
+            if store.exists(f"{g}/{layout.EMB}"):
+                emb_lists.append(store.read_array(f"{g}/{layout.EMB}"))
+                id_lists.append(store.read_array(f"{g}/{layout.IDS}"))
+            else:
+                emb_lists.append(np.zeros((0, info.dim), np.float32))
+                id_lists.append(np.zeros((0,), np.int32))
+        levels.append(pack_children(emb_lists, id_lists, info.dim, pad_multiple=max_leaf_pad))
+    return PackedIndex(info=info, root_emb=root_emb, levels=levels)

@@ -1,0 +1,314 @@
+"""eCP-FS retrieval: lazy node loading, LRU cache, incremental search.
+
+Faithful implementation of the paper's Algorithms 1-3:
+  * ``NewSearch``       — create a query state (Q, T, I), run one increment,
+                          return the first k items plus a query id.
+  * ``GetNextKItems``   — pop k items from I, resuming the tree search via
+                          ``IncrementalSearch`` when I underflows.
+  * ``IncrementalSearch`` — single cross-level priority queue T: always open
+                          the globally most promising node regardless of
+                          level; leaves append scanned items to I; after b
+                          leaves, either return (|I| >= k) or double b
+                          (bounded by mx_inc) and continue.
+
+Node data is loaded on first access and kept in a bounded LRU cache
+(paper §4.2); prefetching up to a level runs on background threads.
+
+Two deliberate fixes of apparent pseudocode typos (semantics follow the
+paper's prose): (1) Algorithm 2 line 4 checks ``cnt = 0`` but the text says
+"in case there is not enough [items] it resumes the search" — we resume when
+``cnt < k``; (2) Algorithm 3 line 26 reads ``increments > mx_inc`` where the
+prose caps doubling at mx_inc — we double while ``increments < mx_inc`` (or
+mx_inc == -1 meaning unbounded).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import threading
+from collections import OrderedDict
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from . import layout
+from .distances import np_distances
+from .fstore import FStore
+
+__all__ = ["NodeCache", "ECPIndex", "QueryState", "SearchStats"]
+
+
+class NodeCache:
+    """LRU cache over (level, node) -> (embeddings f32, ids).
+
+    ``max_nodes``: None = unbounded; 0 = caching off (free after use);
+    n > 0 = keep at most n nodes resident. Tunable at runtime (paper §4.2).
+    """
+
+    def __init__(self, max_nodes: int | None = None):
+        self.max_nodes = max_nodes
+        self._d: OrderedDict[tuple[int, int], tuple[np.ndarray, np.ndarray]] = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def resize(self, max_nodes: int | None) -> None:
+        with self._lock:
+            self.max_nodes = max_nodes
+            self._evict_locked()
+
+    def _evict_locked(self) -> None:
+        if self.max_nodes is None:
+            return
+        while len(self._d) > self.max_nodes:
+            self._d.popitem(last=False)
+            self.evictions += 1
+
+    def get(self, key):
+        with self._lock:
+            v = self._d.get(key)
+            if v is not None:
+                self._d.move_to_end(key)
+                self.hits += 1
+            else:
+                self.misses += 1
+            return v
+
+    def put(self, key, value) -> None:
+        if self.max_nodes == 0:
+            return
+        with self._lock:
+            self._d[key] = value
+            self._d.move_to_end(key)
+            self._evict_locked()
+
+    @property
+    def n_resident(self) -> int:
+        return len(self._d)
+
+    @property
+    def resident_bytes(self) -> int:
+        with self._lock:
+            return sum(e.nbytes + i.nbytes for e, i in self._d.values())
+
+    def clear(self) -> None:
+        with self._lock:
+            self._d.clear()
+
+
+@dataclass
+class SearchStats:
+    node_loads: int = 0            # disk reads (cache misses served from files)
+    nodes_opened: int = 0          # total nodes popped from T
+    leaves_opened: int = 0
+    distance_calcs: int = 0        # individual distance computations
+    increments: int = 0            # b-doublings
+
+
+@dataclass
+class QueryState:
+    """Persistent per-query state (paper §4.3): Q.q, Q.T, Q.I."""
+
+    q: np.ndarray
+    b: int
+    mx_inc: int
+    exclude: set = field(default_factory=set)
+    T: list = field(default_factory=list)              # heap of (d, tie, is_leaf, level, node)
+    I: list = field(default_factory=list)              # sorted [(d, item_id)]
+    started: bool = False
+    increments: int = 0
+    emitted: int = 0
+    stats: SearchStats = field(default_factory=SearchStats)
+    _tie: "itertools.count" = field(default_factory=itertools.count)
+
+
+class ECPIndex:
+    """Open an eCP-FS file structure for retrieval."""
+
+    def __init__(
+        self,
+        path: str | FStore,
+        *,
+        cache_max_nodes: int | None = None,
+        prefetch_workers: int = 4,
+    ):
+        self.store = path if isinstance(path, FStore) else FStore(path)
+        self.info = layout.IndexInfo.from_attrs(self.store.read_attrs(layout.INFO))
+        # Loading the index = read info + index_root only (paper §4.2).
+        self.root_emb = self.store.read_array(f"{layout.ROOT}/{layout.EMB}").astype(np.float32)
+        self.root_ids = self.store.read_array(f"{layout.ROOT}/{layout.IDS}")
+        self.cache = NodeCache(cache_max_nodes)
+        self.QS: list[QueryState] = []
+        self._prefetch_workers = prefetch_workers
+        self.load_node_count = 0
+
+    # ------------------------------------------------------------ node IO
+    def get_node(self, level: int, node: int) -> tuple[np.ndarray, np.ndarray]:
+        key = (level, node)
+        v = self.cache.get(key)
+        if v is not None:
+            return v
+        g = layout.node_group(level, node)
+        emb_path = f"{g}/{layout.EMB}"
+        if not self.store.exists(emb_path):
+            v = (np.zeros((0, self.info.dim), np.float32), np.zeros((0,), np.int64))
+        else:
+            emb = self.store.read_array(emb_path).astype(np.float32)  # f16 -> f32 (paper)
+            ids = self.store.read_array(f"{g}/{layout.IDS}")
+            v = (emb, ids)
+        self.load_node_count += 1
+        self.cache.put(key, v)
+        return v
+
+    def prefetch(self, up_to_level: int) -> None:
+        """Background-load all nodes at levels 1..up_to_level (paper §4.2)."""
+        keys = [
+            (lv, j)
+            for lv in range(1, min(up_to_level, self.info.levels) + 1)
+            for j in range(self.info.nodes_per_level[lv - 1])
+        ]
+        with ThreadPoolExecutor(max_workers=self._prefetch_workers) as ex:
+            list(ex.map(lambda k: self.get_node(*k), keys))
+
+    # ------------------------------------------------------- Algorithm 1
+    def new_search(
+        self,
+        q: np.ndarray,
+        k: int = 100,
+        *,
+        b: int = 8,
+        mx_inc: int = 4,
+        exclude: set | None = None,
+    ) -> tuple[list[tuple[float, int]], int]:
+        qs = QueryState(
+            q=np.asarray(q, np.float32),
+            b=b,
+            mx_inc=mx_inc,
+            exclude=set(exclude) if exclude else set(),
+        )
+        self.QS.append(qs)
+        q_id = len(self.QS) - 1
+        self._incremental_search(q_id, k)
+        return self.get_next_k(q_id, k), q_id
+
+    # ------------------------------------------------------- Algorithm 2
+    def get_next_k(self, q_id: int, k: int) -> list[tuple[float, int]]:
+        qs = self.QS[q_id]
+        cnt = min(len(qs.I), k)
+        if cnt < k and qs.T:
+            self._incremental_search(q_id, k)
+            cnt = min(len(qs.I), k)
+        out, qs.I = qs.I[:cnt], qs.I[cnt:]
+        qs.emitted += len(out)
+        return out
+
+    # ------------------------------------------------------- Algorithm 3
+    def _incremental_search(self, q_id: int, k: int) -> None:
+        qs = self.QS[q_id]
+        info = self.info
+        metric = info.metric
+        leaf_cnt = 0
+        loads_before = self.load_node_count
+
+        if not qs.started:
+            qs.started = True
+            d = np_distances(qs.q, self.root_emb, metric)
+            qs.stats.distance_calcs += len(self.root_emb)
+            is_leaf = 1 if info.levels == 1 else 0
+            for c, dist in zip(self.root_ids, d):
+                heapq.heappush(qs.T, (float(dist), next(qs._tie), is_leaf, 1, int(c)))
+
+        while qs.T:
+            dist, _, is_leaf, level, node = heapq.heappop(qs.T)
+            qs.stats.nodes_opened += 1
+            emb, ids = self.get_node(level, node)
+            if len(ids) == 0:
+                continue
+            d = np_distances(qs.q, emb, metric)
+            qs.stats.distance_calcs += len(ids)
+            if is_leaf:
+                qs.stats.leaves_opened += 1
+                for c, cd in zip(ids, d):
+                    c = int(c)
+                    if c not in qs.exclude:
+                        qs.I.append((float(cd), c))
+                leaf_cnt += 1
+            else:
+                next_is_leaf = 1 if (level + 1) == info.levels else 0
+                for c, cd in zip(ids, d):
+                    heapq.heappush(
+                        qs.T, (float(cd), next(qs._tie), next_is_leaf, level + 1, int(c))
+                    )
+            if is_leaf and leaf_cnt >= qs.b:
+                if len(qs.I) >= k:
+                    break
+                if qs.mx_inc == -1 or qs.increments < qs.mx_inc:
+                    qs.increments += 1
+                    qs.stats.increments += 1
+                    qs.b *= 2
+                else:
+                    break
+        qs.stats.node_loads += self.load_node_count - loads_before
+        qs.I.sort(key=lambda t: t[0])
+
+    # ------------------------------------------------------------- misc
+    def drop_query(self, q_id: int) -> None:
+        self.QS[q_id] = None  # type: ignore[assignment]
+
+    def save_query_state(self, q_id: int, group: str = "query_states") -> None:
+        """Persist a query state into the same file structure (paper §6.2)."""
+        qs = self.QS[q_id]
+        g = f"{group}/q_{q_id:06d}"
+        self.store.create_group(g)
+        self.store.write_array(f"{g}/query", qs.q)
+        if qs.I:
+            d = np.asarray([x[0] for x in qs.I], np.float32)
+            i = np.asarray([x[1] for x in qs.I], np.int64)
+        else:
+            d = np.zeros((0,), np.float32)
+            i = np.zeros((0,), np.int64)
+        self.store.write_array(f"{g}/item_dists", d)
+        self.store.write_array(f"{g}/item_ids", i)
+        if qs.T:
+            t = np.asarray(
+                [(e[0], e[2], e[3], e[4]) for e in qs.T], np.float64
+            )
+        else:
+            t = np.zeros((0, 4), np.float64)
+        self.store.write_array(f"{g}/frontier", t)
+        self.store.write_attrs(
+            g,
+            {
+                "b": qs.b,
+                "mx_inc": qs.mx_inc,
+                "increments": qs.increments,
+                "emitted": qs.emitted,
+                "started": qs.started,
+                "exclude": sorted(int(x) for x in qs.exclude),
+            },
+        )
+
+    def load_query_state(self, q_id: int, group: str = "query_states") -> int:
+        g = f"{group}/q_{q_id:06d}"
+        a = self.store.read_attrs(g)
+        qs = QueryState(
+            q=self.store.read_array(f"{g}/query"),
+            b=int(a["b"]),
+            mx_inc=int(a["mx_inc"]),
+            exclude=set(a.get("exclude", [])),
+        )
+        qs.increments = int(a["increments"])
+        qs.emitted = int(a["emitted"])
+        qs.started = bool(a["started"])
+        d = self.store.read_array(f"{g}/item_dists")
+        i = self.store.read_array(f"{g}/item_ids")
+        qs.I = [(float(x), int(y)) for x, y in zip(d, i)]
+        t = self.store.read_array(f"{g}/frontier")
+        for row in t:
+            heapq.heappush(
+                qs.T, (float(row[0]), next(qs._tie), int(row[1]), int(row[2]), int(row[3]))
+            )
+        self.QS.append(qs)
+        return len(self.QS) - 1

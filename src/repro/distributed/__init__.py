@@ -1,0 +1,12 @@
+from .collectives import psum_compressed, tree_psum
+from .elastic import make_shardings, reshard_tree
+from .fault_tolerance import FailureInjector, TrainSupervisor
+
+__all__ = [
+    "psum_compressed",
+    "tree_psum",
+    "make_shardings",
+    "reshard_tree",
+    "FailureInjector",
+    "TrainSupervisor",
+]

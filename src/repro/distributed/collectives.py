@@ -1,0 +1,34 @@
+"""Collective helpers used inside shard_map'd train steps.
+
+``psum_compressed`` is the cross-pod gradient reduce with int8 + error
+feedback (optim/compress.py): quantize per-leaf, psum the int32 payload
+over the slow axis, dequantize. Intra-pod reduction stays in the native
+dtype. Under jit/GSPMD (no explicit psum), the equivalent is applying
+compress_decompress to grads before the optimizer — numerically identical,
+which is how launch/train.py wires it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.compress import dequantize_int8, quantize_int8
+
+__all__ = ["psum_compressed", "tree_psum"]
+
+
+def tree_psum(tree, axis_name: str):
+    return jax.tree.map(lambda x: jax.lax.psum(x, axis_name), tree)
+
+
+def psum_compressed(tree, axis_name: str):
+    """int8-quantized psum (for the cross-pod DCN axis inside shard_map)."""
+
+    def leaf(g):
+        q, scale = quantize_int8(g)
+        # int8 payload crosses the wire; accumulate in int32
+        total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        scale = jax.lax.pmax(scale, axis_name)  # shared conservative scale
+        return dequantize_int8(total, scale).astype(g.dtype)
+
+    return jax.tree.map(leaf, tree)

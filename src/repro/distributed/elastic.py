@@ -1,0 +1,28 @@
+"""Elastic scaling: reshard a training state onto a different mesh.
+
+Checkpoints are host numpy (checkpoint/), so elasticity is a device_put
+with the new mesh's NamedSharding — a 512-chip state restores onto 256
+chips (or 1 CPU) without format changes. The ONLY invariant the caller
+must respect is that the global batch is re-split over the new "data"
+extent (StepLoader.n_shards), which the launcher does.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+__all__ = ["reshard_tree", "make_shardings"]
+
+
+def make_shardings(mesh: Mesh, pspec_tree):
+    return jax.tree.map(
+        lambda ps: NamedSharding(mesh, ps),
+        pspec_tree,
+        is_leaf=lambda x: isinstance(x, PartitionSpec),
+    )
+
+
+def reshard_tree(tree, mesh: Mesh, pspec_tree):
+    """Place a (host or device) pytree onto ``mesh`` with the given specs."""
+    shardings = make_shardings(mesh, pspec_tree)
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+  distance_topk    — fused distance + running top-k (the eCP-FS hot path:
+                     leaf scans, centroid scoring, recsys candidate scoring)
+  flash_attention  — online-softmax attention forward (LM prefill/decode)
+
+Each subpackage: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+public wrapper with impl dispatch), ref.py (pure-jnp oracle).
+"""
+from .distance_topk import distance_topk
+from .flash_attention import flash_attention
+
+__all__ = ["distance_topk", "flash_attention"]

@@ -1,0 +1,5 @@
+from .ops import distance_topk
+from .ref import distance_topk_ref
+from .distance_topk import distance_topk_pallas
+
+__all__ = ["distance_topk", "distance_topk_ref", "distance_topk_pallas"]

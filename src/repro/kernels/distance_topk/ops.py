@@ -1,0 +1,29 @@
+"""Public op: distance_topk — jit'd wrapper choosing kernel vs reference.
+
+On TPU the Pallas kernel runs compiled; in this CPU container it is
+validated with ``interpret=True``. ``impl="auto"`` uses the reference path
+on CPU (fast) and the kernel on TPU, so callers never branch themselves.
+"""
+from __future__ import annotations
+
+import jax
+
+from .distance_topk import distance_topk_pallas
+from .ref import distance_topk_ref
+
+
+def distance_topk(q, c, k: int, metric: str = "l2", *, impl: str = "auto", **kw):
+    """q [B, D], c [N, D] -> (dists [B, k], idx [B, k]), ascending distance.
+
+    impl: "auto" | "ref" | "pallas" | "pallas_interpret"
+    """
+    if impl == "auto":
+        platform = jax.devices()[0].platform
+        impl = "pallas" if platform == "tpu" else "ref"
+    if impl == "ref":
+        return distance_topk_ref(q, c, k, metric)
+    if impl == "pallas":
+        return distance_topk_pallas(q, c, k, metric, **kw)
+    if impl == "pallas_interpret":
+        return distance_topk_pallas(q, c, k, metric, interpret=True, **kw)
+    raise ValueError(f"unknown impl {impl!r}")

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the fused distance+top-k kernel.
+
+Materializes the full [B, N] distance matrix (exactly what the Pallas kernel
+avoids) and selects with lax.top_k. Smaller distance = better; ties broken
+by lower candidate index (both here and in the kernel).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distances import jnp_distances
+
+
+def distance_topk_ref(q, c, k: int, metric: str = "l2"):
+    """q: [B, D]; c: [N, D] -> (dists [B, k], idx [B, k]) ascending."""
+    d = jnp_distances(q, c, metric)                    # [B, N] f32
+    n = d.shape[-1]
+    # encode index into the mantissa-free tiebreak: top_k on (-d, -idx)
+    neg_d, idx = jax.lax.top_k(-d, k)
+    # lax.top_k is stable (prefers lower index on ties) — matches the kernel
+    return -neg_d, idx.astype(jnp.int32)

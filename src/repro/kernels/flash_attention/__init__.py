@@ -1,0 +1,5 @@
+from .ops import flash_attention
+from .ref import mha_ref
+from .flash_attention import flash_attention_pallas
+
+__all__ = ["flash_attention", "mha_ref", "flash_attention_pallas"]

@@ -1,0 +1,29 @@
+"""Public op: flash_attention — jit'd wrapper choosing kernel vs reference.
+
+Training paths in models/ use the differentiable chunked-jnp attention
+(models/attention.py); this op serves the inference paths (prefill/decode)
+where the Pallas kernel is the TPU hot path. On CPU, "auto" falls back to
+the reference for speed; the kernel itself is validated in interpret mode.
+"""
+from __future__ import annotations
+
+import jax
+
+from .flash_attention import flash_attention_pallas
+from .ref import mha_ref
+
+
+def flash_attention(q, k, v, *, kv_lens=None, causal=True, scale=None, impl="auto", **kw):
+    if impl == "auto":
+        impl = "pallas" if jax.devices()[0].platform == "tpu" else "ref"
+    if impl == "ref":
+        return mha_ref(q, k, v, causal=causal, kv_lens=kv_lens, scale=scale)
+    if impl == "pallas":
+        return flash_attention_pallas(
+            q, k, v, kv_lens=kv_lens, causal=causal, scale=scale, **kw
+        )
+    if impl == "pallas_interpret":
+        return flash_attention_pallas(
+            q, k, v, kv_lens=kv_lens, causal=causal, scale=scale, interpret=True, **kw
+        )
+    raise ValueError(f"unknown impl {impl!r}")

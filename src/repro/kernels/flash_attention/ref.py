@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for flash attention (GQA-aware, causal, length-masked)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mha_ref(q, k, v, *, causal: bool = True, kv_lens=None, scale: float | None = None):
+    """q [B, Hq, Sq, d]; k,v [B, Hkv, Skv, d]; kv_lens [B] or None.
+
+    GQA: Hq must be a multiple of Hkv; query head h attends kv head
+    h // (Hq // Hkv). Causal alignment: the LAST query aligns with the last
+    valid kv position (decode convention).
+    Returns [B, Hq, Sq, d] float32.
+    """
+    B, Hq, Sq, d = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    q = q.astype(jnp.float32)
+    k = jnp.repeat(k.astype(jnp.float32), group, axis=1)
+    v = jnp.repeat(v.astype(jnp.float32), group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    kv_idx = jnp.arange(Skv)[None, None, None, :]
+    if kv_lens is not None:
+        s = jnp.where(kv_idx < kv_lens[:, None, None, None], s, -jnp.inf)
+        end = kv_lens[:, None, None, None]
+    else:
+        end = Skv
+    if causal:
+        q_idx = jnp.arange(Sq)[None, None, :, None]
+        # last query aligns with last valid kv position
+        allowed = kv_idx <= (q_idx + (end - Sq))
+        s = jnp.where(allowed, s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)

@@ -1,0 +1,30 @@
+"""Launch layer: mesh construction, dry-run, training and serving drivers.
+
+LAZY on purpose: ``python -m repro.launch.dryrun`` imports this package
+BEFORE dryrun.py runs, and dryrun.py must set XLA_FLAGS (512 host devices)
+before anything touches jax. No eager imports here.
+"""
+from __future__ import annotations
+
+import importlib
+
+_EXPORTS = {
+    "Cell": "cells",
+    "build_cell": "cells",
+    "example_inputs": "cells",
+    "lower_cell": "cells",
+    "make_rules": "cells",
+    "make_train_step": "cells",
+    "batch_axes_of": "mesh",
+    "make_host_mesh": "mesh",
+    "make_production_mesh": "mesh",
+}
+
+__all__ = list(_EXPORTS)
+
+
+def __getattr__(name: str):
+    if name in _EXPORTS:
+        mod = importlib.import_module(f".{_EXPORTS[name]}", __name__)
+        return getattr(mod, name)
+    raise AttributeError(name)

@@ -1,0 +1,191 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes, prove it fits, and extract the roofline inputs.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch phi4-mini-3.8b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+      --out benchmarks/results
+
+Per cell it records: compile wall time, per-device peak HBM
+(memory_analysis), HLO FLOPs/bytes (cost_analysis), per-collective wire
+bytes (hlo_analysis), and the three roofline terms. Failures here are
+sharding bugs by definition (see the assignment) — the run aborts loudly.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+# repo root on sys.path so the benchmarks package resolves when invoked
+# as `python -m repro.launch.dryrun` from anywhere
+sys.path.insert(0, str(Path(__file__).resolve().parents[3]))
+
+from repro.configs import ALL_CELLS
+from repro.launch.cells import build_cell, lower_cell
+from repro.launch.mesh import make_production_mesh
+
+
+def _hlo_modules():
+    from benchmarks import hlo_analysis  # repo-root benchmarks package
+
+    return hlo_analysis
+
+
+def run_cell(arch: str, shape: str, mesh, *, verbose: bool = True) -> dict:
+    hlo = _hlo_modules()
+    from benchmarks import analytic
+    from repro.configs import arch_shapes
+
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    cell = build_cell(arch, shape, mesh_axes=mesh.axis_names)
+    lowered = lower_cell(cell, mesh)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    # collectives: loop-aware (XLA's numbers count while bodies once)
+    coll = hlo.loop_aware_collective_bytes(text)
+    # compute/memory: exact analytic counts (HLO undercounts through scans)
+    sh = dict(arch_shapes(arch)[shape])
+    flops_global = analytic.cell_flops(cell.meta, sh["kind"], sh)
+    hbm_global = analytic.cell_hbm_bytes(cell.meta, sh["kind"], sh)
+    terms = {
+        "compute_s": flops_global / n_chips / hlo.PEAK_FLOPS,
+        "memory_s": hbm_global / n_chips / hlo.HBM_BW,
+        "collective_s": coll["total_bytes"] / hlo.ICI_BW,
+        "flops_per_chip": flops_global / n_chips,
+        "bytes_per_chip": hbm_global / n_chips,
+        "coll_bytes_per_chip": float(coll["total_bytes"]),
+    }
+    # keep the raw HLO numbers for reference (documented-undercounted)
+    hlo_flops_once = float(cost.get("flops", 0.0))
+    hlo_bytes_once = float(cost.get("bytes accessed", 0.0))
+
+    # The CPU backend ignores buffer donation, so memory_analysis double-
+    # counts donated state (params/opt/caches appear as arg AND output).
+    # On TPU the donated pairs alias; subtract them for the honest figure.
+    def _sharded_bytes(sds_tree, ps_tree):
+        import numpy as _np
+        from jax.sharding import PartitionSpec as _P
+
+        tot = 0
+        leaves = jax.tree.leaves(sds_tree)
+        specs = jax.tree.leaves(ps_tree, is_leaf=lambda x: isinstance(x, _P))
+        for leaf, ps in zip(leaves, specs):
+            shards = 1
+            for entry in ps:
+                axes = entry if isinstance(entry, tuple) else (entry,)
+                for a in axes:
+                    if a is not None:
+                        shards *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+            tot += int(_np.prod(leaf.shape)) * jax.dtypes.canonicalize_dtype(leaf.dtype).itemsize // shards
+        return tot
+
+    donated = sum(_sharded_bytes(cell.args[i], cell.in_pspecs[i]) for i in cell.donate)
+
+    rec = {
+        "arch": arch,
+        "shape": shape,
+        "kind": cell.kind,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "n_chips": int(n_chips),
+        "n_params": int(cell.meta.get("n_params", 0)),
+        "tokens": int(cell.meta.get("tokens", 0)),
+        "n_candidates": int(cell.meta.get("n_candidates", 0)),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "peak_hbm_bytes": int(getattr(mem, "temp_size_in_bytes", 0))
+        + int(getattr(mem, "argument_size_in_bytes", 0))
+        + int(getattr(mem, "output_size_in_bytes", 0)),
+        "donated_bytes": int(donated),
+        "peak_hbm_adjusted": int(getattr(mem, "temp_size_in_bytes", 0))
+        + int(getattr(mem, "argument_size_in_bytes", 0))
+        + int(getattr(mem, "output_size_in_bytes", 0))
+        - int(donated),
+        "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+        "arg_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+        "out_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+        "flops_per_chip": terms["flops_per_chip"],
+        "hbm_bytes_per_chip": terms["bytes_per_chip"],
+        "coll_bytes_per_chip": terms["coll_bytes_per_chip"],
+        "coll_by_type": coll["by_type"],
+        "coll_bytes_static": coll.get("static_bytes", 0),
+        "hlo_flops_once": hlo_flops_once,
+        "hlo_bytes_once": hlo_bytes_once,
+        "compute_s": terms["compute_s"],
+        "memory_s": terms["memory_s"],
+        "collective_s": terms["collective_s"],
+    }
+    dom = max(("compute_s", "memory_s", "collective_s"), key=lambda k: rec[k])
+    rec["bottleneck"] = dom.replace("_s", "")
+    if verbose:
+        hbm_gb = rec["peak_hbm_adjusted"] / 2**30
+        print(
+            f"[dryrun] {arch:28s} {shape:14s} mesh={rec['mesh']:10s} "
+            f"compile={t_compile:6.1f}s hbm/dev={hbm_gb:7.2f}GiB "
+            f"T_comp={rec['compute_s']:.3e} T_mem={rec['memory_s']:.3e} "
+            f"T_coll={rec['collective_s']:.3e} -> {rec['bottleneck']}",
+            flush=True,
+        )
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--out", default="benchmarks/results")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    cells = (
+        list(ALL_CELLS)
+        if args.all
+        else [(args.arch, s) for a, s in ALL_CELLS if a == args.arch and (args.shape in (None, s))]
+    )
+    if not cells:
+        raise SystemExit(f"no cells selected (arch={args.arch} shape={args.shape})")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    failures = []
+    for multi_pod in meshes:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        tag = "multi" if multi_pod else "single"
+        for arch, shape in cells:
+            fp = outdir / f"dryrun_{tag}_{arch}_{shape}.json"
+            if args.skip_existing and fp.exists():
+                print(f"[dryrun] skip existing {fp.name}", flush=True)
+                continue
+            try:
+                rec = run_cell(arch, shape, mesh)
+                fp.write_text(json.dumps(rec, indent=1))
+            except Exception as e:  # sharding bug: report and continue sweep
+                failures.append((tag, arch, shape, repr(e)))
+                print(f"[dryrun] FAIL {arch} {shape} ({tag}): {e}", flush=True)
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", *f[:3], f[3][:160])
+        raise SystemExit(1)
+    print("\nAll dry-run cells compiled successfully.")
+
+
+if __name__ == "__main__":
+    main()

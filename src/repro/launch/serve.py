@@ -1,0 +1,128 @@
+"""ANN serving driver — the paper's own application as a service loop.
+
+Two serving modes over one eCP-FS index:
+  * interactive  — host-driven incremental search (Algorithms 1-3): per-query
+    state, get-next-k continuation, LRU-bounded memory. The paper's mode.
+  * batched      — device-side level-synchronous beam search
+    (core/batched.py): request batching with a fixed tick, the TPU mode.
+
+  PYTHONPATH=src python -m repro.launch.serve --demo
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import (
+    BatchedSearcher,
+    ECPBuildConfig,
+    ECPIndex,
+    build_index,
+    load_packed,
+)
+from repro.data import clustered_vectors
+
+
+@dataclass
+class ServeStats:
+    queries: int = 0
+    continuations: int = 0
+    latencies_ms: list = field(default_factory=list)
+
+    def summary(self) -> dict:
+        lat = sorted(self.latencies_ms)
+        n = len(lat)
+        return {
+            "queries": self.queries,
+            "continuations": self.continuations,
+            "p50_ms": lat[n // 2] if n else None,
+            "p99_ms": lat[int(n * 0.99)] if n else None,
+        }
+
+
+class InteractiveServer:
+    """The paper's serving mode: query states + incremental retrieval."""
+
+    def __init__(self, index_path: str, *, cache_max_nodes: int | None = None):
+        self.index = ECPIndex(index_path, cache_max_nodes=cache_max_nodes)
+        self.stats = ServeStats()
+
+    def search(self, q, k=100, b=8):
+        t0 = time.perf_counter()
+        res, qid = self.index.new_search(np.asarray(q, np.float32), k, b=b)
+        self.stats.queries += 1
+        self.stats.latencies_ms.append((time.perf_counter() - t0) * 1e3)
+        return res, qid
+
+    def more(self, qid, k=100):
+        t0 = time.perf_counter()
+        res = self.index.get_next_k(qid, k)
+        self.stats.continuations += 1
+        self.stats.latencies_ms.append((time.perf_counter() - t0) * 1e3)
+        return res
+
+
+class BatchedServer:
+    """TPU mode: collect requests, run one device beam-search per tick."""
+
+    def __init__(self, index_path: str):
+        self.searcher = BatchedSearcher(load_packed(ECPIndex(index_path).store))
+        self.stats = ServeStats()
+        self._sessions: dict[int, tuple] = {}
+        self._next_sid = 0
+
+    def search_batch(self, Q, k=100, b=8):
+        t0 = time.perf_counter()
+        d, i, state = self.searcher.search(np.asarray(Q, np.float32), k, b=b)
+        sid = self._next_sid
+        self._next_sid += 1
+        self._sessions[sid] = (np.asarray(Q, np.float32), state)
+        self.stats.queries += Q.shape[0]
+        self.stats.latencies_ms.append((time.perf_counter() - t0) * 1e3)
+        return np.asarray(d), np.asarray(i), sid
+
+    def more_batch(self, sid, k=100, b=8):
+        t0 = time.perf_counter()
+        Q, state = self._sessions[sid]
+        d, i, state = self.searcher.next_k(Q, state, k, b=b)
+        self._sessions[sid] = (Q, state)
+        self.stats.continuations += Q.shape[0]
+        self.stats.latencies_ms.append((time.perf_counter() - t0) * 1e3)
+        return np.asarray(d), np.asarray(i)
+
+
+def demo() -> None:
+    import tempfile
+
+    data, _ = clustered_vectors(0, n=50_000, dim=128, n_clusters=256)
+    with tempfile.TemporaryDirectory() as td:
+        path = td + "/idx"
+        print("building index ...")
+        build_index(data, path, ECPBuildConfig(levels=2, cluster_cap=200, metric="l2"))
+        srv = InteractiveServer(path, cache_max_nodes=64)
+        rng = np.random.default_rng(1)
+        qs = data[rng.integers(0, len(data), 32)] + 0.01 * rng.normal(size=(32, 128)).astype(np.float32)
+        sessions = []
+        for q in qs:
+            res, qid = srv.search(q, k=20, b=8)
+            sessions.append(qid)
+        for qid in sessions[:8]:
+            srv.more(qid, k=20)
+        print("interactive:", srv.stats.summary())
+        bsrv = BatchedServer(path)
+        d, i, sid = bsrv.search_batch(qs, k=20, b=8)
+        bsrv.more_batch(sid, k=20)
+        print("batched:    ", bsrv.stats.summary())
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--demo", action="store_true")
+    args = ap.parse_args()
+    if args.demo:
+        demo()
+    else:
+        print("use --demo (library mode: import InteractiveServer/BatchedServer)")

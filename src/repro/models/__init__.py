@@ -1,0 +1,18 @@
+"""Model zoo: LM transformers (dense/MoE), GraphSAGE, CTR models.
+
+All models are pure functions over ParamSpec-declared param trees (base.py),
+so init / abstract lowering / sharding derive from one declaration.
+"""
+from . import attention, gnn, recsys, transformer
+from .base import abstract_params, init_params, param_count, param_pspecs
+
+__all__ = [
+    "attention",
+    "gnn",
+    "recsys",
+    "transformer",
+    "abstract_params",
+    "init_params",
+    "param_count",
+    "param_pspecs",
+]

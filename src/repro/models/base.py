@@ -1,0 +1,101 @@
+"""Functional parameter-spec system.
+
+Every model declares its parameters ONCE as a pytree of ``ParamSpec`` leaves
+(shape, dtype, sharding axes, initializer). From that single declaration we
+derive:
+  * ``init_params``      — materialized, randomly initialized arrays
+  * ``abstract_params``  — jax.ShapeDtypeStruct tree (dry-run lowering
+                           without allocating a single byte)
+  * ``param_pspecs``     — PartitionSpec tree for pjit in_shardings
+  * ``param_count``      — exact parameter count
+
+This is the property that makes the 512-device multi-pod dry-run honest:
+the SAME spec tree feeds both the real CPU smoke tests (tiny configs) and
+the abstract production lowering (full configs).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec
+
+__all__ = [
+    "ParamSpec",
+    "init_params",
+    "abstract_params",
+    "param_pspecs",
+    "param_count",
+    "param_bytes",
+]
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    dtype: Any = jnp.float32
+    pspec: tuple = ()                 # PartitionSpec entries, e.g. (None, "model")
+    init: str = "fan_in"              # fan_in | normal | zeros | ones | embed
+    scale: float | None = None        # stddev override
+    fan_in_axis: int = -2             # axis treated as fan-in for scaling
+
+    def partition_spec(self) -> PartitionSpec:
+        if not self.pspec:
+            return PartitionSpec()
+        return PartitionSpec(*self.pspec)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _init_leaf(spec: ParamSpec, key) -> jnp.ndarray:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "embed":
+        std = spec.scale if spec.scale is not None else 0.02
+        return (jax.random.normal(key, spec.shape) * std).astype(spec.dtype)
+    if spec.init == "normal":
+        std = spec.scale if spec.scale is not None else 1.0
+        return (jax.random.normal(key, spec.shape) * std).astype(spec.dtype)
+    if spec.init == "fan_in":
+        fan = spec.shape[spec.fan_in_axis] if len(spec.shape) >= 2 else spec.shape[0]
+        std = spec.scale if spec.scale is not None else 1.0 / math.sqrt(max(fan, 1))
+        return (jax.random.normal(key, spec.shape) * std).astype(spec.dtype)
+    raise ValueError(f"unknown init {spec.init!r}")
+
+
+def init_params(spec_tree, rng_key):
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=_is_spec)
+    keys = jax.random.split(rng_key, max(len(leaves), 1))
+    out = [_init_leaf(s, k) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(spec_tree):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), spec_tree, is_leaf=_is_spec
+    )
+
+
+def param_pspecs(spec_tree):
+    return jax.tree.map(lambda s: s.partition_spec(), spec_tree, is_leaf=_is_spec)
+
+
+def param_count(spec_tree) -> int:
+    return sum(
+        int(np.prod(s.shape)) for s in jax.tree.leaves(spec_tree, is_leaf=_is_spec)
+    )
+
+
+def param_bytes(spec_tree) -> int:
+    return sum(
+        int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+        for s in jax.tree.leaves(spec_tree, is_leaf=_is_spec)
+    )

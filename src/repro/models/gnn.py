@@ -1,0 +1,151 @@
+"""GraphSAGE (Hamilton et al., arXiv:1706.02216) in three execution regimes.
+
+JAX has no CSR/CSC sparse — message passing is built from first principles
+(DESIGN.md §4): gather source features by edge index, ``jax.ops.segment_sum``
+into destinations, degree-normalize. That segment formulation IS the system
+here, not a fallback:
+
+  * full-batch    — segment-sum over the whole edge list (Cora/ogbn scale);
+                    edges shard over "data", nodes replicate or shard.
+  * sampled       — dense fanout tensors from the neighbor sampler
+                    (data/graph.py): hop-h features [B, f1..fh, d]; mean
+                    aggregation is an axis-mean — the TPU-friendly layout.
+  * batched small graphs (molecule) — per-graph edge lists flattened with
+    node offsets, same segment-sum path, mean-pool readout.
+
+The paper's technique (eCP-FS) is INAPPLICABLE to GraphSAGE (DESIGN.md §8);
+this model ships without it, as required.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .base import ParamSpec as P
+from .layers import softmax_xent
+
+__all__ = ["GraphSAGEConfig", "param_specs", "full_batch_forward", "sampled_forward", "batched_graph_forward", "gnn_loss_full", "gnn_loss_sampled", "gnn_loss_graphs"]
+
+
+@dataclass(frozen=True)
+class GraphSAGEConfig:
+    name: str
+    d_in: int
+    n_classes: int
+    n_layers: int = 2
+    d_hidden: int = 128
+    aggregator: str = "mean"
+    fanouts: tuple = (25, 10)
+    dtype: Any = jnp.float32
+
+
+def param_specs(cfg: GraphSAGEConfig):
+    dims = [cfg.d_in] + [cfg.d_hidden] * cfg.n_layers
+    layers = []
+    for l in range(cfg.n_layers):
+        layers.append(
+            {
+                "w_self": P((dims[l], dims[l + 1]), cfg.dtype),
+                "w_neigh": P((dims[l], dims[l + 1]), cfg.dtype),
+                "b": P((dims[l + 1],), cfg.dtype, (), "zeros"),
+            }
+        )
+    return {
+        "layers": layers,
+        "w_out": P((cfg.d_hidden, cfg.n_classes), cfg.dtype),
+        "b_out": P((cfg.n_classes,), cfg.dtype, (), "zeros"),
+    }
+
+
+def _sage_layer(h_self, h_agg, lp, act=True):
+    y = h_self @ lp["w_self"] + h_agg @ lp["w_neigh"] + lp["b"]
+    return jax.nn.relu(y) if act else y
+
+
+# ------------------------------------------------------------- full batch
+def full_batch_forward(params, feats, edge_src, edge_dst, cfg: GraphSAGEConfig, *, edge_weight=None):
+    """feats [N, d]; edge_src/dst [E] int32 (messages flow src -> dst).
+
+    edge_weight [E] (optional): 0-weight edges are padding — node and edge
+    arrays are padded to shard-divisible sizes by the launcher, and the
+    weights keep padded edges out of both the sum and the degree.
+    """
+    n = feats.shape[0]
+    w = jnp.ones_like(edge_dst, jnp.float32) if edge_weight is None else edge_weight
+    deg = jax.ops.segment_sum(w, edge_dst, n)
+    inv_deg = 1.0 / jnp.maximum(deg, 1.0)
+    h = feats.astype(cfg.dtype)
+    for lp in params["layers"]:
+        msg = jnp.take(h, edge_src, axis=0) * w[:, None]
+        agg = jax.ops.segment_sum(msg, edge_dst, n) * inv_deg[:, None]
+        h = _sage_layer(h, agg, lp)
+    return h @ params["w_out"] + params["b_out"]
+
+
+def gnn_loss_full(params, batch, cfg: GraphSAGEConfig):
+    logits = full_batch_forward(
+        params,
+        batch["feats"],
+        batch["edge_src"],
+        batch["edge_dst"],
+        cfg,
+        edge_weight=batch.get("edge_weight"),
+    )
+    return softmax_xent(logits, batch["labels"], mask=batch.get("label_mask")), {}
+
+
+# --------------------------------------------------------------- sampled
+def sampled_forward(params, hops, cfg: GraphSAGEConfig):
+    """hops: tuple of fanout tensors, outermost hop first.
+
+    hops[-1] = seed features [B, d]; hops[-2] = 1-hop [B, f1, d];
+    hops[0] = (L)-hop [B, f1, ..., fL, d]. Mean aggregation = axis mean.
+    """
+    hs = [h.astype(cfg.dtype) for h in hops]
+    for lp in params["layers"]:
+        new_hs = []
+        for i in range(len(hs) - 1):
+            neigh = jnp.mean(hs[i], axis=-2)  # collapse the innermost fanout axis
+            new_hs.append(_sage_layer(hs[i + 1], neigh, lp))
+        hs = new_hs
+    return hs[0] @ params["w_out"] + params["b_out"]
+
+
+def gnn_loss_sampled(params, batch, cfg: GraphSAGEConfig):
+    logits = sampled_forward(params, batch["hops"], cfg)
+    return softmax_xent(logits, batch["labels"]), {}
+
+
+# -------------------------------------------------- batched small graphs
+def batched_graph_forward(params, feats, edge_src, edge_dst, node_mask, cfg: GraphSAGEConfig):
+    """feats [G, N, d]; edges [G, E] local indices; node_mask [G, N].
+
+    Flattens graphs with node offsets and reuses the segment-sum path;
+    readout = masked mean pool -> graph logits [G, n_classes].
+    """
+    G, N, d = feats.shape
+    offs = (jnp.arange(G) * N)[:, None]
+    src = (edge_src + offs).reshape(-1)
+    dst = (edge_dst + offs).reshape(-1)
+    flat = feats.reshape(G * N, d)
+    n = G * N
+    deg = jax.ops.segment_sum(jnp.ones_like(dst, jnp.float32), dst, n)
+    inv_deg = 1.0 / jnp.maximum(deg, 1.0)
+    h = flat.astype(cfg.dtype)
+    for lp in params["layers"]:
+        msg = jnp.take(h, src, axis=0)
+        agg = jax.ops.segment_sum(msg, dst, n) * inv_deg[:, None]
+        h = _sage_layer(h, agg, lp)
+    h = h.reshape(G, N, -1) * node_mask[..., None]
+    pooled = h.sum(1) / jnp.maximum(node_mask.sum(1, keepdims=True), 1.0)
+    return pooled @ params["w_out"] + params["b_out"]
+
+
+def gnn_loss_graphs(params, batch, cfg: GraphSAGEConfig):
+    logits = batched_graph_forward(
+        params, batch["feats"], batch["edge_src"], batch["edge_dst"], batch["node_mask"], cfg
+    )
+    return softmax_xent(logits, batch["labels"]), {}

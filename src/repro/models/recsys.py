@@ -1,0 +1,348 @@
+"""CTR / ranking models: BST, DIEN, AutoInt, DCN-v2.
+
+Embedding substrate (JAX has no nn.EmbeddingBag — built here, per the
+assignment): all categorical fields live in ONE concatenated mega-table
+[total_vocab, embed_dim] with per-field row offsets. A batch of field ids
+becomes a single gather; multi-hot bags reduce with a mask
+(fixed shapes) or ``jax.ops.segment_sum`` (ragged path). The mega-table
+shards over "model" rows; the gather becomes an all-to-all under GSPMD —
+that is the standard recsys sharding (tables >> activations).
+
+``retrieval_cand`` cells: ``user_tower`` produces a query embedding;
+candidates score via batched dot + top-k (brute force baseline) or through
+the eCP index (the paper's technique, launch/serve.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .base import ParamSpec as P
+from .layers import bce_logits, layer_norm
+
+__all__ = [
+    "RecSysConfig", "param_specs", "forward", "recsys_loss", "user_tower",
+    "embedding_lookup", "embedding_bag", "candidate_scores",
+]
+
+
+@dataclass(frozen=True)
+class RecSysConfig:
+    name: str
+    interaction: str                  # "transformer-seq" | "augru" | "self-attn" | "cross"
+    embed_dim: int
+    field_vocabs: tuple               # rows per categorical field (mega-table layout)
+    n_dense: int = 0                  # continuous features
+    seq_len: int = 0                  # behavior sequence length (BST/DIEN)
+    seq_fields: int = 0               # id fields per sequence position
+    mlp: tuple = (256, 128)
+    # BST / AutoInt attention params
+    n_blocks: int = 1
+    n_heads: int = 2
+    d_attn: int = 32
+    # DIEN
+    gru_dim: int = 0
+    # DCN
+    n_cross_layers: int = 0
+    dtype: Any = jnp.float32
+
+    @property
+    def n_fields(self) -> int:
+        return len(self.field_vocabs)
+
+    @property
+    def total_vocab(self) -> int:
+        return int(sum(self.field_vocabs))
+
+    @property
+    def field_offsets(self) -> tuple:
+        offs, acc = [], 0
+        for v in self.field_vocabs:
+            offs.append(acc)
+            acc += v
+        return tuple(offs)
+
+
+# ------------------------------------------------------------- embeddings
+def embedding_lookup(table, ids):
+    """ids [...] (already offset into the mega-table) -> [..., dim]."""
+    return jnp.take(table, ids, axis=0)
+
+
+def embedding_bag(table, ids, mask, *, mode: str = "mean"):
+    """Fixed-shape embedding bag: ids [B, L], mask [B, L] -> [B, dim]."""
+    e = jnp.take(table, ids, axis=0) * mask[..., None]
+    if mode == "sum":
+        return e.sum(1)
+    if mode == "mean":
+        return e.sum(1) / jnp.maximum(mask.sum(1, keepdims=True), 1.0)
+    if mode == "max":
+        neg = jnp.where(mask[..., None] > 0, e, -jnp.inf)
+        return jnp.max(neg, axis=1)
+    raise ValueError(mode)
+
+
+def embedding_bag_ragged(table, flat_ids, segment_ids, n_bags, *, mode: str = "sum"):
+    """Ragged bag via segment_sum — the torch EmbeddingBag equivalent."""
+    e = jnp.take(table, flat_ids, axis=0)
+    s = jax.ops.segment_sum(e, segment_ids, n_bags)
+    if mode == "sum":
+        return s
+    cnt = jax.ops.segment_sum(jnp.ones_like(flat_ids, jnp.float32), segment_ids, n_bags)
+    return s / jnp.maximum(cnt[:, None], 1.0)
+
+
+def _mlp_specs(dims, dt, prefix=""):
+    out = {}
+    for i in range(len(dims) - 1):
+        out[f"{prefix}w{i}"] = P((dims[i], dims[i + 1]), dt)
+        out[f"{prefix}b{i}"] = P((dims[i + 1],), dt, (), "zeros")
+    return out
+
+
+def _mlp_apply(params, x, n, prefix="", act=jax.nn.relu, final_act=False):
+    for i in range(n):
+        x = x @ params[f"{prefix}w{i}"] + params[f"{prefix}b{i}"]
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+# ----------------------------------------------------------- param specs
+def param_specs(cfg: RecSysConfig):
+    dt = cfg.dtype
+    d = cfg.embed_dim
+    # table rows padded to a shard-divisible count (model axis <= 512 on the
+    # production meshes); offsets never address the pad rows
+    rows = -(-cfg.total_vocab // 512) * 512 if cfg.total_vocab > 512 else cfg.total_vocab
+    specs: dict = {
+        "table": P((rows, d), dt, ("model", None), "embed"),
+    }
+    seq_d = d * cfg.seq_fields
+    if cfg.interaction == "transformer-seq":  # BST
+        dm = seq_d
+        specs.update(
+            {
+                "pos_embed": P((cfg.seq_len + 1, dm), dt, (None, None), "embed"),
+                "wq": P((cfg.n_blocks, dm, cfg.n_heads * cfg.d_attn), dt),
+                "wk": P((cfg.n_blocks, dm, cfg.n_heads * cfg.d_attn), dt),
+                "wv": P((cfg.n_blocks, dm, cfg.n_heads * cfg.d_attn), dt),
+                "wo": P((cfg.n_blocks, cfg.n_heads * cfg.d_attn, dm), dt),
+                "ln_g": P((cfg.n_blocks, 2, dm), dt, (None, None, None), "ones"),
+                "ln_b": P((cfg.n_blocks, 2, dm), dt, (None, None, None), "zeros"),
+                "ffw1": P((cfg.n_blocks, dm, 4 * dm), dt),
+                "ffb1": P((cfg.n_blocks, 4 * dm), dt, (None, None), "zeros"),
+                "ffw2": P((cfg.n_blocks, 4 * dm, dm), dt),
+                "ffb2": P((cfg.n_blocks, dm), dt, (None, None), "zeros"),
+            }
+        )
+        mlp_in = (cfg.seq_len + 1) * dm + (cfg.n_fields - cfg.seq_fields) * d
+    elif cfg.interaction == "augru":  # DIEN
+        g = cfg.gru_dim
+        specs.update(
+            {
+                "gru_wx": P((seq_d, 3 * g), dt),
+                "gru_wh": P((g, 3 * g), dt),
+                "gru_b": P((3 * g,), dt, (), "zeros"),
+                "att_w": P((g, seq_d), dt),
+                "augru_wx": P((g, 3 * g), dt),
+                "augru_wh": P((g, 3 * g), dt),
+                "augru_b": P((3 * g,), dt, (), "zeros"),
+            }
+        )
+        mlp_in = g + (cfg.n_fields - cfg.seq_fields) * d + seq_d
+    elif cfg.interaction == "self-attn":  # AutoInt
+        da, H = cfg.d_attn, cfg.n_heads
+        specs.update(
+            {
+                "wq": P((1, d, H * da), dt),
+                "wk": P((1, d, H * da), dt),
+                "wv": P((1, d, H * da), dt),
+                "w_res": P((1, d, H * da), dt),
+            }
+        )
+        if cfg.n_blocks > 1:  # after block 0 the field dim becomes H*da
+            specs["wq2"] = P((cfg.n_blocks - 1, H * da, H * da), dt)
+            specs["wk2"] = P((cfg.n_blocks - 1, H * da, H * da), dt)
+            specs["wv2"] = P((cfg.n_blocks - 1, H * da, H * da), dt)
+            specs["w_res2"] = P((cfg.n_blocks - 1, H * da, H * da), dt)
+        mlp_in = cfg.n_fields * H * da
+    elif cfg.interaction == "cross":  # DCN-v2
+        x0_dim = cfg.n_dense + cfg.n_fields * d
+        specs.update(
+            {
+                "cross_w": P((cfg.n_cross_layers, x0_dim, x0_dim), dt),
+                "cross_b": P((cfg.n_cross_layers, x0_dim), dt, (None, None), "zeros"),
+            }
+        )
+        mlp_in = x0_dim
+    else:
+        raise ValueError(cfg.interaction)
+
+    mlp_dims = (mlp_in,) + tuple(cfg.mlp)
+    specs.update(_mlp_specs(mlp_dims, dt, "mlp_"))
+    if cfg.interaction == "cross":
+        # DCN-v2 parallel structure: concat(cross_out, deep_out) -> logit
+        head_in = (cfg.n_dense + cfg.n_fields * d) + cfg.mlp[-1]
+    else:
+        head_in = cfg.mlp[-1]
+    specs["w_head"] = P((head_in, 1), dt)
+    specs["b_head"] = P((1,), dt, (), "zeros")
+    # retrieval tower projection (retrieval_cand workload)
+    specs["w_ret"] = P((d, d), dt)
+    return specs
+
+
+# ----------------------------------------------------------- interactions
+def _bst_block(params, i, x, cfg: RecSysConfig):
+    B, S, dm = x.shape
+    H, da = cfg.n_heads, cfg.d_attn
+    h = layer_norm(x, params["ln_g"][i, 0], params["ln_b"][i, 0])
+    q = (h @ params["wq"][i]).reshape(B, S, H, da)
+    k = (h @ params["wk"][i]).reshape(B, S, H, da)
+    v = (h @ params["wv"][i]).reshape(B, S, H, da)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(jnp.asarray(da, jnp.float32))
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v).reshape(B, S, H * da)
+    x = x + o @ params["wo"][i]
+    h2 = layer_norm(x, params["ln_g"][i, 1], params["ln_b"][i, 1])
+    y = jax.nn.relu(h2 @ params["ffw1"][i] + params["ffb1"][i]) @ params["ffw2"][i] + params["ffb2"][i]
+    return x + y
+
+
+def _gru_scan(x_seq, w_x, w_h, b, g, att=None):
+    """GRU / AUGRU over time. x_seq [B, S, d] -> hidden states [B, S, g].
+
+    att [B, S] (attention scores) turns the update gate into DIEN's AUGRU:
+    z_t <- a_t * z_t. With att = 1 this is exactly a plain GRU.
+    """
+    B, S, _ = x_seq.shape
+    if att is None:
+        att = jnp.ones((B, S), x_seq.dtype)
+
+    def cell(h, xs):
+        x_t, a_t = xs
+        gx = x_t @ w_x + b                         # [B, 3g]
+        gh = h @ w_h                               # [B, 3g]
+        z = jax.nn.sigmoid(gx[:, :g] + gh[:, :g])
+        r = jax.nn.sigmoid(gx[:, g : 2 * g] + gh[:, g : 2 * g])
+        hh = jnp.tanh(gx[:, 2 * g :] + r * gh[:, 2 * g :])
+        z = z * a_t[:, None]                       # AUGRU attentional gate
+        h_new = (1 - z) * h + z * hh
+        return h_new, h_new
+
+    h0 = jnp.zeros((B, g), x_seq.dtype)
+    _, hs = jax.lax.scan(cell, h0, (jnp.moveaxis(x_seq, 1, 0), jnp.moveaxis(att, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1)
+
+
+def _autoint_block(x, wq, wk, wv, wres, H, da):
+    B, F, d = x.shape
+    q = (x @ wq).reshape(B, F, H, da)
+    k = (x @ wk).reshape(B, F, H, da)
+    v = (x @ wv).reshape(B, F, H, da)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(jnp.asarray(da, jnp.float32))
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v).reshape(B, F, H * da)
+    return jax.nn.relu(o + x @ wres)
+
+
+# ---------------------------------------------------------------- forward
+def forward(params, batch, cfg: RecSysConfig):
+    """batch fields (ids are RAW per-field; offsets applied here):
+       "cat": [B, n_fields - seq_fields] non-sequence categorical ids
+       "seq": [B, seq_len, seq_fields] behavior ids (BST/DIEN; field 0.. )
+       "seq_mask": [B, seq_len]
+       "target": [B, seq_fields] target item ids (BST/DIEN)
+       "dense": [B, n_dense]
+    Returns logits [B].
+    """
+    d = cfg.embed_dim
+    table = params["table"]
+    offs = jnp.asarray(cfg.field_offsets, jnp.int32)
+    n_plain = cfg.n_fields - cfg.seq_fields
+
+    if cfg.interaction == "transformer-seq":
+        seq_ids = batch["seq"] + offs[None, None, :cfg.seq_fields]
+        tgt_ids = batch["target"] + offs[None, :cfg.seq_fields]
+        seq_e = embedding_lookup(table, seq_ids).reshape(*batch["seq"].shape[:2], -1)
+        tgt_e = embedding_lookup(table, tgt_ids).reshape(batch["target"].shape[0], -1)
+        x = jnp.concatenate([seq_e, tgt_e[:, None, :]], axis=1)      # [B, S+1, dm]
+        x = x + params["pos_embed"][None, : x.shape[1]]
+        for i in range(cfg.n_blocks):
+            x = _bst_block(params, i, x, cfg)
+        plain = embedding_lookup(table, batch["cat"] + offs[None, cfg.seq_fields :])
+        feat = jnp.concatenate([x.reshape(x.shape[0], -1), plain.reshape(x.shape[0], -1)], axis=-1)
+        h = _mlp_apply(params, feat, len(cfg.mlp), "mlp_", final_act=True)
+    elif cfg.interaction == "augru":
+        g = cfg.gru_dim
+        seq_ids = batch["seq"] + offs[None, None, :cfg.seq_fields]
+        tgt_ids = batch["target"] + offs[None, :cfg.seq_fields]
+        seq_e = embedding_lookup(table, seq_ids).reshape(*batch["seq"].shape[:2], -1)
+        tgt_e = embedding_lookup(table, tgt_ids).reshape(batch["target"].shape[0], -1)
+        hs = _gru_scan(seq_e, params["gru_wx"], params["gru_wh"], params["gru_b"], g)
+        att_logit = jnp.einsum("bsg,gd,bd->bs", hs, params["att_w"], tgt_e)
+        att = jax.nn.softmax(
+            jnp.where(batch["seq_mask"] > 0, att_logit, -1e9), axis=-1
+        )  # -1e9 not -inf: an all-masked row degrades to uniform, never NaN
+        hs2 = _gru_scan(hs, params["augru_wx"], params["augru_wh"], params["augru_b"], g, att=att)
+        final = hs2[:, -1]
+        plain = embedding_lookup(table, batch["cat"] + offs[None, cfg.seq_fields :])
+        feat = jnp.concatenate([final, plain.reshape(final.shape[0], -1), tgt_e], axis=-1)
+        h = _mlp_apply(params, feat, len(cfg.mlp), "mlp_", final_act=True)
+    elif cfg.interaction == "self-attn":
+        x = embedding_lookup(table, batch["cat"] + offs[None, :])    # [B, F, d]
+        H, da = cfg.n_heads, cfg.d_attn
+        x = _autoint_block(x, params["wq"][0], params["wk"][0], params["wv"][0], params["w_res"][0], H, da)
+        for i in range(cfg.n_blocks - 1):
+            x = _autoint_block(x, params["wq2"][i], params["wk2"][i], params["wv2"][i], params["w_res2"][i], H, da)
+        feat = x.reshape(x.shape[0], -1)
+        h = _mlp_apply(params, feat, len(cfg.mlp), "mlp_", final_act=True)
+    elif cfg.interaction == "cross":
+        emb = embedding_lookup(table, batch["cat"] + offs[None, :]).reshape(batch["cat"].shape[0], -1)
+        x0 = jnp.concatenate([batch["dense"].astype(emb.dtype), emb], axis=-1)
+        x = x0
+        for i in range(cfg.n_cross_layers):
+            x = x0 * (x @ params["cross_w"][i] + params["cross_b"][i]) + x
+        deep = _mlp_apply(params, x0, len(cfg.mlp), "mlp_", final_act=True)
+        h = jnp.concatenate([x, deep], axis=-1)
+    else:
+        raise ValueError(cfg.interaction)
+
+    return (h @ params["w_head"] + params["b_head"])[:, 0]
+
+
+def recsys_loss(params, batch, cfg: RecSysConfig):
+    logits = forward(params, batch, cfg)
+    return bce_logits(logits, batch["label"]), {}
+
+
+# ---------------------------------------------------------- retrieval cand
+def user_tower(params, batch, cfg: RecSysConfig):
+    """Query embedding for retrieval scoring: mean field embedding -> proj."""
+    table = params["table"]
+    offs = jnp.asarray(cfg.field_offsets, jnp.int32)
+    if cfg.seq_len and "seq" in batch:
+        ids = (batch["seq"] + offs[None, None, :cfg.seq_fields]).reshape(batch["seq"].shape[0], -1)
+        mask = jnp.repeat(batch["seq_mask"], cfg.seq_fields, axis=-1)
+        e = embedding_bag(table, ids, mask, mode="mean")
+    else:
+        ids = batch["cat"] + offs[None, : batch["cat"].shape[1]]
+        e = embedding_lookup(table, ids).mean(1)
+    return e @ params["w_ret"]
+
+
+def candidate_scores(query, cand_emb, k: int, *, impl: str = "auto"):
+    """Retrieval scoring: [B, d] x [N, d] -> top-k (scores desc, ids).
+
+    Routes through the fused distance_topk Pallas kernel (inner-product
+    metric; the [B, N] score matrix never materializes in HBM on TPU) —
+    "auto" uses the reference path on CPU.
+    """
+    from repro.kernels.distance_topk import distance_topk
+
+    d, i = distance_topk(query, cand_emb, k, "ip", impl=impl)
+    return -d, i

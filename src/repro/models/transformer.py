@@ -1,0 +1,540 @@
+"""Decoder-only LM family: dense GQA transformers and top-1 MoE variants.
+
+One config covers all five assigned LM architectures (RoPE, SwiGLU,
+GQA, optional QKV bias, optional MoE FFN). Layers are ``lax.scan``ned over
+stacked parameters — compile time and HLO size are O(1) in depth, which is
+what makes the 88-layer/123B dry-run lowering tractable.
+
+Distribution: batch shards over ("pod","data"); projections shard their
+feature dim over "model" (Megatron-style TP); MoE experts shard over
+"model" (EP); the long-context clustered KV cache shards its cluster axis
+over "data" (sequence parallelism). ``ShardingRules`` carries the axis
+names so the same code lowers for any mesh (and runs unconstrained on CPU).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+from .attention import attention
+from .base import ParamSpec as P
+from .layers import rms_norm, rope, softmax_xent, swiglu
+from .moe import MoEConfig, moe_ffn, moe_ffn_ep
+from .retrieval_attention import (
+    ClusteredKVCache,
+    RetrievalAttnConfig,
+    clustered_cache_update,
+    init_clustered_cache,
+    retrieval_decode_attention,
+)
+
+__all__ = ["LMConfig", "ShardingRules", "KVCache", "param_specs", "forward", "lm_loss", "prefill", "decode_step", "retrieval_decode_step", "init_cache"]
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """Logical-axis → mesh-axis mapping used by with_sharding_constraint."""
+
+    batch: tuple = ()          # e.g. ("data",) or ("pod", "data")
+    model: str | None = None   # tensor/expert axis
+    seq: str | None = None     # sequence axis (long-context cells)
+
+    @staticmethod
+    def null() -> "ShardingRules":
+        return ShardingRules()
+
+    def spec(self, *axes) -> PartitionSpec:
+        out = []
+        for a in axes:
+            if a == "B":
+                out.append(self.batch if self.batch else None)
+            elif a == "M":
+                out.append(self.model)
+            elif a == "S":
+                out.append(self.seq)
+            else:
+                out.append(None)
+        return PartitionSpec(*out)
+
+    def shard(self, x, *axes):
+        if not self.batch and self.model is None and self.seq is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, self.spec(*axes))
+
+
+@dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int = 128
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    max_seq: int = 4096
+    dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+    moe: MoEConfig | None = None
+    moe_every: int = 1              # 2 => alternate dense/MoE layers (Llama-4)
+    retrieval: RetrievalAttnConfig = field(default_factory=RetrievalAttnConfig)
+    attn_impl: str = "chunked"      # training attention path
+    attn_chunk: int = 1024
+    remat: bool = True
+    fsdp_axis: Any = None           # axis (or tuple) to ZeRO-3 shard params over
+    pure_fsdp: bool = False         # no tensor parallelism: FSDP-only layout
+    microbatches: int = 1           # gradient-accumulation chunks per step
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.d_head
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.d_head
+
+
+# ------------------------------------------------------------------ params
+def _layer_specs(cfg: LMConfig, n: int, *, moe: bool) -> dict:
+    """Specs for ``n`` stacked layers with dense or MoE FFN."""
+    D, F = cfg.d_model, cfg.d_ff
+    pdt = cfg.param_dtype
+    fs = cfg.fsdp_axis  # None -> replicate the non-"model" big dim
+    tp = None if cfg.pure_fsdp else "model"   # pure FSDP: no TP axis at all
+    layers: dict[str, P] = {
+        "attn_norm": P((n, D), pdt, (None, None), "ones"),
+        "wq": P((n, D, cfg.q_dim), pdt, (None, fs, tp)),
+        "wk": P((n, D, cfg.kv_dim), pdt, (None, fs, tp)),
+        "wv": P((n, D, cfg.kv_dim), pdt, (None, fs, tp)),
+        "wo": P((n, cfg.q_dim, D), pdt, (None, tp, fs)),
+        "ffn_norm": P((n, D), pdt, (None, None), "ones"),
+    }
+    if cfg.qkv_bias:
+        layers["bq"] = P((n, cfg.q_dim), pdt, (None, tp), "zeros")
+        layers["bk"] = P((n, cfg.kv_dim), pdt, (None, tp), "zeros")
+        layers["bv"] = P((n, cfg.kv_dim), pdt, (None, tp), "zeros")
+    if not moe:
+        layers["w_gate"] = P((n, D, F), pdt, (None, fs, tp))
+        layers["w_up"] = P((n, D, F), pdt, (None, fs, tp))
+        layers["w_down"] = P((n, F, D), pdt, (None, tp, fs))
+    else:
+        E, Fe = cfg.moe.n_experts, cfg.moe.d_ff
+        layers["router"] = P((n, D, E), pdt, (None, fs, None))
+        layers["we_gate"] = P((n, E, D, Fe), pdt, (None, "model", fs, None))
+        layers["we_up"] = P((n, E, D, Fe), pdt, (None, "model", fs, None))
+        layers["we_down"] = P((n, E, Fe, D), pdt, (None, "model", fs, None))
+    return layers
+
+
+def param_specs(cfg: LMConfig):
+    L, D, V = cfg.n_layers, cfg.d_model, cfg.vocab
+    pdt = cfg.param_dtype
+    fs = cfg.fsdp_axis
+    if cfg.moe is None:
+        layers = _layer_specs(cfg, L, moe=False)
+    elif cfg.moe_every == 1:
+        layers = _layer_specs(cfg, L, moe=True)
+    elif cfg.moe_every == 2:
+        assert L % 2 == 0, "moe_every=2 needs an even layer count"
+        layers = {
+            "dense": _layer_specs(cfg, L // 2, moe=False),
+            "moe": _layer_specs(cfg, L // 2, moe=True),
+        }
+    else:
+        raise ValueError("moe_every must be 1 or 2")
+    if cfg.pure_fsdp:
+        # embed/lm_head shard their D dim (always 256-divisible; vocab like
+        # phi4's 200064 is not) — the lm_head contraction psums logits
+        return {
+            "embed": P((V, D), pdt, (None, fs), "embed"),
+            "layers": layers,
+            "final_norm": P((D,), pdt, (None,), "ones"),
+            "lm_head": P((D, V), pdt, (fs, None)),
+        }
+    return {
+        "embed": P((V, D), pdt, ("model", fs), "embed"),
+        "layers": layers,
+        "final_norm": P((D,), pdt, (None,), "ones"),
+        "lm_head": P((D, V), pdt, (fs, "model")),
+    }
+
+
+def _is_block(cfg: LMConfig) -> bool:
+    return cfg.moe is not None and cfg.moe_every == 2
+
+
+# ----------------------------------------------------------------- forward
+def _sp_on(rules: ShardingRules) -> bool:
+    """Megatron sequence-parallel mode: residuals seq-sharded on 'model'."""
+    return rules.model is not None and rules.seq == rules.model
+
+
+def _qkv(h, lp, cfg: LMConfig, positions, rules: ShardingRules = ShardingRules()):
+    B, S, _ = h.shape
+    q = h @ lp["wq"].astype(h.dtype)
+    k = h @ lp["wk"].astype(h.dtype)
+    v = h @ lp["wv"].astype(h.dtype)
+    if cfg.qkv_bias:
+        q = q + lp["bq"].astype(h.dtype)
+        k = k + lp["bk"].astype(h.dtype)
+        v = v + lp["bv"].astype(h.dtype)
+    q = q.reshape(B, S, cfg.n_heads, cfg.d_head)
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.d_head)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.d_head)
+    if _sp_on(rules):
+        # q heads shard over model (Hq is 16-divisible in every assigned
+        # arch x 16-wide mesh? 24/28 are not — GSPMD pads those two, still
+        # strictly better than d-sharded contraction); kv heads (4..8 <
+        # mesh) REPLICATE — this removes the per-chunk all-reduce of
+        # [B,H,cq,d] scores that dominated the baseline (566 GB x2 /step).
+        q = rules.shard(q, "B", None, "M", None)
+        k = rules.shard(k, "B", None, None, None)
+        v = rules.shard(v, "B", None, None, None)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _ffn(h2, lp, cfg: LMConfig, rules: ShardingRules):
+    B, S, D = h2.shape
+    if "router" not in lp:
+        return (
+            swiglu(
+                h2,
+                lp["w_gate"].astype(h2.dtype),
+                lp["w_up"].astype(h2.dtype),
+                lp["w_down"].astype(h2.dtype),
+            ),
+            jnp.zeros((), jnp.float32),
+        )
+    flat = h2.reshape(B * S, D)
+    if _sp_on(rules):  # explicit expert-parallel dispatch (zero all-to-all)
+        y, aux = moe_ffn_ep(
+            flat,
+            lp["router"],
+            lp["we_gate"].astype(h2.dtype),
+            lp["we_up"].astype(h2.dtype),
+            lp["we_down"].astype(h2.dtype),
+            cfg.moe,
+            model_axis=rules.model,
+            batch_axes=rules.batch,
+        )
+    else:
+        y, aux = moe_ffn(
+            flat,
+            lp["router"],
+            lp["we_gate"].astype(h2.dtype),
+            lp["we_up"].astype(h2.dtype),
+            lp["we_down"].astype(h2.dtype),
+            cfg.moe,
+        )
+    return y.reshape(B, S, D), aux
+
+
+def _layer(x, lp, cfg: LMConfig, rules: ShardingRules, positions):
+    """One transformer layer.
+
+    Megatron-SP layout when seq==model axis (training/prefill cells):
+    residual x is seq-sharded; layer entry all-gathers seq (the ONLY gather,
+    [B,S,D] bf16), internals run head-/feature-sharded with no collective,
+    and each residual write is a reduce-scatter back to seq-sharded.
+    """
+    sp = _sp_on(rules)
+    h = rms_norm(x, lp["attn_norm"].astype(x.dtype))
+    if sp:
+        h = rules.shard(h, "B", None, None)          # all-gather seq
+    q, k, v = _qkv(h, lp, cfg, positions, rules)
+    o = attention(
+        q.transpose(0, 2, 1, 3),
+        k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3),
+        causal=True,
+        impl=cfg.attn_impl,
+        chunk=cfg.attn_chunk,
+        remat=cfg.remat,
+    )                                                    # [B, Hq, S, dh] f32
+    o = o.transpose(0, 2, 1, 3).reshape(x.shape[0], x.shape[1], cfg.q_dim)
+    if sp:
+        o = rules.shard(o.astype(x.dtype), "B", None, "M")
+        att = rules.shard(o @ lp["wo"].astype(x.dtype), "B", "S", None)  # RS
+    else:
+        o = rules.shard(o.astype(x.dtype), "B", "S", "M")
+        att = o @ lp["wo"].astype(x.dtype)
+    x = x + att
+    h2 = rms_norm(x, lp["ffn_norm"].astype(x.dtype))
+    if sp:
+        h2 = rules.shard(h2, "B", None, None)        # all-gather seq
+    y, aux = _ffn(h2, lp, cfg, rules)
+    if sp:
+        y = rules.shard(y, "B", "S", None)           # reduce-scatter
+    x = x + y
+    x = rules.shard(x, "B", "S", None)
+    return x, aux
+
+
+def _cast_layers(layers, dtype):
+    """Cast stacked layer params to the compute dtype ONCE, outside the
+    layer scan — so FSDP all-gathers move bf16, not f32 (2x wire + HBM)."""
+    return jax.tree.map(lambda w: w.astype(dtype), layers)
+
+
+def forward(params, tokens, cfg: LMConfig, rules: ShardingRules = ShardingRules()):
+    """tokens [B, S] int32 -> (logits [B, S, V] f32, aux loss)."""
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    x = rules.shard(x, "B", "S", None)
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    layers = _cast_layers(params["layers"], cfg.dtype)
+
+    def body(carry, lp):
+        if _is_block(cfg):
+            h, a1 = _layer(carry, lp["dense"], cfg, rules, positions)
+            h, a2 = _layer(h, lp["moe"], cfg, rules, positions)
+            return h, a1 + a2
+        return _layer(carry, lp, cfg, rules, positions)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, auxs = jax.lax.scan(body, x, layers)
+    x = rms_norm(x, params["final_norm"].astype(x.dtype))
+    logits = (x @ params["lm_head"].astype(x.dtype)).astype(jnp.float32)
+    # with sequence-parallel residuals (seq == model axis) keep logits
+    # seq-sharded; otherwise shard the vocab dim
+    if rules.seq is not None and rules.seq == rules.model:
+        logits = rules.shard(logits, "B", "S", None)
+    else:
+        logits = rules.shard(logits, "B", "S", "M")
+    return logits, jnp.sum(auxs)
+
+
+def lm_loss(params, batch, cfg: LMConfig, rules: ShardingRules = ShardingRules()):
+    """batch: {"tokens": [B, S]}; next-token cross entropy + MoE aux."""
+    tokens = batch["tokens"]
+    logits, aux = forward(params, tokens[:, :-1], cfg, rules)
+    xent = softmax_xent(logits, tokens[:, 1:])
+    return xent + aux, {"xent": xent, "aux": aux}
+
+
+# ------------------------------------------------------------------ serving
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class KVCache:
+    k: jnp.ndarray    # [L, B, Hkv, Smax, dh]
+    v: jnp.ndarray
+    pos: jnp.ndarray  # [] int32
+
+    def tree_flatten(self):
+        return (self.k, self.v, self.pos), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def init_cache(cfg: LMConfig, batch: int, max_seq: int | None = None) -> KVCache:
+    S = max_seq or cfg.max_seq
+    shape = (cfg.n_layers, batch, cfg.n_kv_heads, S, cfg.d_head)
+    return KVCache(
+        k=jnp.zeros(shape, cfg.dtype), v=jnp.zeros(shape, cfg.dtype), pos=jnp.zeros((), jnp.int32)
+    )
+
+
+def _prefill_layer(carry, lp, cfg, rules, positions, Smax):
+    B, S = positions.shape
+    sp = _sp_on(rules)
+    h = rms_norm(carry, lp["attn_norm"].astype(carry.dtype))
+    if sp:
+        h = rules.shard(h, "B", None, None)
+    q, k, v = _qkv(h, lp, cfg, positions, rules)
+    o = attention(
+        q.transpose(0, 2, 1, 3),
+        k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3),
+        causal=True,
+        impl=cfg.attn_impl,
+        chunk=cfg.attn_chunk,
+        remat=cfg.remat,
+    )
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, cfg.q_dim).astype(carry.dtype)
+    if sp:
+        o = rules.shard(o, "B", None, "M")
+        att = rules.shard(o @ lp["wo"].astype(carry.dtype), "B", "S", None)
+    else:
+        att = o @ lp["wo"].astype(carry.dtype)
+    xx = carry + att
+    h2 = rms_norm(xx, lp["ffn_norm"].astype(xx.dtype))
+    if sp:
+        h2 = rules.shard(h2, "B", None, None)
+    y, _ = _ffn(h2, lp, cfg, rules)
+    if sp:
+        y = rules.shard(y, "B", "S", None)
+    xx = rules.shard(xx + y, "B", "S", None)
+    kpad = jnp.zeros((B, cfg.n_kv_heads, Smax - S, cfg.d_head), cfg.dtype)
+    kc = jnp.concatenate([k.transpose(0, 2, 1, 3).astype(cfg.dtype), kpad], axis=2)
+    vc = jnp.concatenate([v.transpose(0, 2, 1, 3).astype(cfg.dtype), kpad], axis=2)
+    return xx, kc, vc
+
+
+def prefill(params, tokens, cfg: LMConfig, rules: ShardingRules = ShardingRules(), *, max_seq: int | None = None):
+    """Run the prompt; return (last-position logits, filled KVCache)."""
+    B, S = tokens.shape
+    Smax = max_seq or max(cfg.max_seq, S)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    x = rules.shard(x, "B", "S", None)
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    layers = _cast_layers(params["layers"], cfg.dtype)
+
+    def body(carry, lp):
+        if _is_block(cfg):
+            h, k1, v1 = _prefill_layer(carry, lp["dense"], cfg, rules, positions, Smax)
+            h, k2, v2 = _prefill_layer(h, lp["moe"], cfg, rules, positions, Smax)
+            return h, (jnp.stack([k1, k2]), jnp.stack([v1, v2]))
+        h, k1, v1 = _prefill_layer(carry, lp, cfg, rules, positions, Smax)
+        return h, (k1, v1)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, (kall, vall) = jax.lax.scan(body, x, layers)
+    if _is_block(cfg):  # [L/2, 2, ...] -> [L, ...]
+        kall = kall.reshape((cfg.n_layers,) + kall.shape[2:])
+        vall = vall.reshape((cfg.n_layers,) + vall.shape[2:])
+    x = rms_norm(x, params["final_norm"].astype(x.dtype))
+    logits = (x[:, -1] @ params["lm_head"].astype(x.dtype)).astype(jnp.float32)
+    cache = KVCache(k=kall, v=vall, pos=jnp.asarray(S, jnp.int32))
+    return logits, cache
+
+
+def _decode_layer(carry, lp, kc, vc, cfg, rules, positions, pos):
+    B = carry.shape[0]
+    h = rms_norm(carry, lp["attn_norm"].astype(carry.dtype))
+    q, k, v = _qkv(h, lp, cfg, positions)                 # [B,1,H,dh]
+    kc = jax.lax.dynamic_update_slice(
+        kc, k.transpose(0, 2, 1, 3).astype(kc.dtype), (0, 0, pos, 0)
+    )
+    vc = jax.lax.dynamic_update_slice(
+        vc, v.transpose(0, 2, 1, 3).astype(vc.dtype), (0, 0, pos, 0)
+    )
+    # decode attention: explicit flash-decoding over the model-axis-sharded
+    # cache when distributed (shard_map; GSPMD otherwise all-gathers the
+    # cache), plain chunked attention on a single device
+    if rules.model is not None:
+        from .attention import flash_decode_sharded
+
+        o = flash_decode_sharded(
+            q.transpose(0, 2, 1, 3), kc, vc,
+            jnp.full((B,), pos + 1, jnp.int32), model_axis=rules.model,
+        )
+    else:
+        o = attention(
+            q.transpose(0, 2, 1, 3),
+            kc,
+            vc,
+            causal=True,
+            kv_lens=jnp.full((B,), pos + 1, jnp.int32),
+            impl="chunked",
+            remat=False,
+        )
+    o = o.transpose(0, 2, 1, 3).reshape(B, 1, cfg.q_dim).astype(carry.dtype)
+    xx = carry + o @ lp["wo"].astype(carry.dtype)
+    h2 = rms_norm(xx, lp["ffn_norm"].astype(xx.dtype))
+    y, _ = _ffn(h2, lp, cfg, rules)
+    return xx + y, kc, vc
+
+
+def decode_step(params, cache: KVCache, tokens, cfg: LMConfig, rules: ShardingRules = ShardingRules()):
+    """One token per sequence. tokens [B] -> (logits [B, V], new cache)."""
+    B = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens[:, None], axis=0).astype(cfg.dtype)  # [B,1,D]
+    pos = cache.pos
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    block = _is_block(cfg)
+    layers = _cast_layers(params["layers"], cfg.dtype)
+    kk, vv = cache.k, cache.v
+    if block:  # [L, ...] -> [L/2, 2, ...]
+        kk = kk.reshape((cfg.n_layers // 2, 2) + kk.shape[1:])
+        vv = vv.reshape((cfg.n_layers // 2, 2) + vv.shape[1:])
+
+    def body(carry, xs):
+        lp, kc, vc = xs
+        if block:
+            h, k1, v1 = _decode_layer(carry, lp["dense"], kc[0], vc[0], cfg, rules, positions, pos)
+            h, k2, v2 = _decode_layer(h, lp["moe"], kc[1], vc[1], cfg, rules, positions, pos)
+            return h, (jnp.stack([k1, k2]), jnp.stack([v1, v2]))
+        h, k1, v1 = _decode_layer(carry, lp, kc, vc, cfg, rules, positions, pos)
+        return h, (k1, v1)
+
+    x, (kall, vall) = jax.lax.scan(body, x, (layers, kk, vv))
+    if block:
+        kall = kall.reshape((cfg.n_layers,) + kall.shape[2:])
+        vall = vall.reshape((cfg.n_layers,) + vall.shape[2:])
+    x = rms_norm(x, params["final_norm"].astype(x.dtype))
+    logits = (x[:, 0] @ params["lm_head"].astype(x.dtype)).astype(jnp.float32)
+    return logits, KVCache(k=kall, v=vall, pos=pos + 1)
+
+
+def _retrieval_layer(carry, lp, kc, vc, cent, cfg, rules, positions, pos):
+    B = carry.shape[0]
+    cs = cfg.retrieval.cluster_size
+    h = rms_norm(carry, lp["attn_norm"].astype(carry.dtype))
+    q, k, v = _qkv(h, lp, cfg, positions)
+    if rules.model is not None:
+        # sequence-parallel eCP search with owner-local cache write:
+        # clusters stay put, scores move (§Perf iterations 1 + 4)
+        from .retrieval_attention import retrieval_update_and_attend_sharded
+
+        o, kc, vc, cent = retrieval_update_and_attend_sharded(
+            q[:, 0], kc, vc, cent, k[:, 0], v[:, 0], pos, cs=cs,
+            top_b=cfg.retrieval.top_clusters,
+            seq_axes=tuple(rules.batch) + (rules.model,),
+        )
+    else:
+        kc, vc, cent = clustered_cache_update(kc, vc, cent, k[:, 0], v[:, 0], pos, cs)
+        o = retrieval_decode_attention(
+            q[:, 0], kc, vc, cent, pos + 1, cs=cs, top_b=cfg.retrieval.top_clusters
+        )
+    o = o.reshape(B, 1, cfg.q_dim).astype(carry.dtype)
+    xx = carry + o @ lp["wo"].astype(carry.dtype)
+    h2 = rms_norm(xx, lp["ffn_norm"].astype(xx.dtype))
+    y, _ = _ffn(h2, lp, cfg, rules)
+    return xx + y, kc, vc, cent
+
+
+def retrieval_decode_step(
+    params, cache: ClusteredKVCache, tokens, cfg: LMConfig, rules: ShardingRules = ShardingRules()
+):
+    """Long-context decode with eCP retrieval attention (paper technique)."""
+    B = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens[:, None], axis=0).astype(cfg.dtype)
+    pos = cache.pos
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    block = _is_block(cfg)
+    layers = _cast_layers(params["layers"], cfg.dtype)
+    kk, vv, cc = cache.k, cache.v, cache.centroids
+    if block:
+        kk = kk.reshape((cfg.n_layers // 2, 2) + kk.shape[1:])
+        vv = vv.reshape((cfg.n_layers // 2, 2) + vv.shape[1:])
+        cc = cc.reshape((cfg.n_layers // 2, 2) + cc.shape[1:])
+
+    def body(carry, xs):
+        lp, kc, vc, cent = xs
+        if block:
+            h, k1, v1, c1 = _retrieval_layer(carry, lp["dense"], kc[0], vc[0], cent[0], cfg, rules, positions, pos)
+            h, k2, v2, c2 = _retrieval_layer(h, lp["moe"], kc[1], vc[1], cent[1], cfg, rules, positions, pos)
+            return h, (jnp.stack([k1, k2]), jnp.stack([v1, v2]), jnp.stack([c1, c2]))
+        h, k1, v1, c1 = _retrieval_layer(carry, lp, kc, vc, cent, cfg, rules, positions, pos)
+        return h, (k1, v1, c1)
+
+    x, (kall, vall, call) = jax.lax.scan(body, x, (layers, kk, vv, cc))
+    if block:
+        kall = kall.reshape((cfg.n_layers,) + kall.shape[2:])
+        vall = vall.reshape((cfg.n_layers,) + vall.shape[2:])
+        call = call.reshape((cfg.n_layers,) + call.shape[2:])
+    x = rms_norm(x, params["final_norm"].astype(x.dtype))
+    logits = (x[:, 0] @ params["lm_head"].astype(x.dtype)).astype(jnp.float32)
+    return logits, ClusteredKVCache(k=kall, v=vall, centroids=call, pos=pos + 1)

@@ -1,0 +1,15 @@
+from .adamw import adamw, apply_updates, global_norm, sgd_momentum
+from .compress import compress_decompress, init_ef_state
+from .schedule import constant, warmup_cosine, warmup_linear_decay
+
+__all__ = [
+    "adamw",
+    "sgd_momentum",
+    "apply_updates",
+    "global_norm",
+    "compress_decompress",
+    "init_ef_state",
+    "constant",
+    "warmup_cosine",
+    "warmup_linear_decay",
+]

@@ -1,0 +1,115 @@
+"""AdamW with decoupled weight decay, global-norm clipping, lr schedules.
+
+Functional optax-style API (no optax in this environment):
+  opt = adamw(lr_schedule, wd=0.1, clip=1.0)
+  state = opt.init(params)
+  updates, state = opt.update(grads, state, params)
+  params = apply_updates(params, updates)
+
+Weight decay skips 1-D parameters (norm scales, biases) by default — the
+standard LM rule.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["adamw", "sgd_momentum", "apply_updates", "global_norm"]
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+
+
+def adamw(
+    lr: Callable[[jnp.ndarray], jnp.ndarray] | float,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    wd: float = 0.1,
+    clip: float | None = 1.0,
+    decay_mask: Callable | None = None,
+    moment_dtype=jnp.float32,   # bf16 moments halve optimizer HBM (400B MoE)
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+        return {
+            "mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        if clip is not None:
+            gn = global_norm(grads)
+            scale = jnp.minimum(1.0, clip / jnp.maximum(gn, 1e-12))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        mu = jax.tree.map(
+            lambda m, g: (b1 * m.astype(jnp.float32) + (1 - b1) * g.astype(jnp.float32)).astype(moment_dtype),
+            state["mu"], grads,
+        )
+        nu = jax.tree.map(
+            lambda v, g: (b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g.astype(jnp.float32))).astype(moment_dtype),
+            state["nu"], grads,
+        )
+        bc1 = 1 - b1**step.astype(jnp.float32)
+        bc2 = 1 - b2**step.astype(jnp.float32)
+        lr_t = lr_fn(step)
+
+        def upd(m, v, p):
+            m = m.astype(jnp.float32)
+            v = v.astype(jnp.float32)
+            u = -(lr_t * (m / bc1) / (jnp.sqrt(v / bc2) + eps))
+            apply_wd = wd > 0 and (decay_mask(p) if decay_mask else p.ndim >= 2)
+            if apply_wd:
+                u = u - lr_t * wd * p.astype(jnp.float32)
+            return u
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, {"mu": mu, "nu": nu, "step": step}
+
+    return Optimizer(init=init, update=update)
+
+
+def sgd_momentum(lr, *, momentum: float = 0.9, clip: float | None = None) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        return {
+            "mom": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        if clip is not None:
+            gn = global_norm(grads)
+            scale = jnp.minimum(1.0, clip / jnp.maximum(gn, 1e-12))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        mom = jax.tree.map(
+            lambda m, g: momentum * m + g.astype(jnp.float32), state["mom"], grads
+        )
+        lr_t = lr_fn(step)
+        updates = jax.tree.map(lambda m: -lr_t * m, mom)
+        return updates, {"mom": mom, "step": step}
+
+    return Optimizer(init=init, update=update)

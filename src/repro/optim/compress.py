@@ -1,0 +1,56 @@
+"""Gradient compression for the cross-pod all-reduce.
+
+int8 uniform quantization with error feedback (EF-SGD style): each leaf is
+scaled by its absmax, rounded to int8, and the quantization residual is
+carried to the next step. Applied ONLY to the slow (cross-pod DCN) reduce —
+intra-pod reduction stays bf16/f32 (DESIGN.md §6). Cuts cross-pod all-reduce
+bytes 4× (f32) / 2× (bf16) at the cost of one extra buffer per leaf.
+
+The transform is pure-functional: state in, state out, jit-safe, so the
+train step can close over it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_ef_state", "compress_decompress", "quantize_int8", "dequantize_int8"]
+
+
+def quantize_int8(x):
+    absmax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12)
+    scale = absmax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def init_ef_state(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compress_decompress(grads, ef_state):
+    """Simulate the quantize→all-reduce→dequantize round trip with EF.
+
+    Returns (decompressed grads, new error-feedback state). In the real
+    multi-pod launch the int8 payload is what crosses the DCN; here the
+    numerics (and the EXPERIMENTS.md collective-byte accounting) use this
+    exact function.
+    """
+
+    def leaf(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(corrected)
+        deq = dequantize_int8(q, scale)
+        return deq.astype(g.dtype), corrected - deq
+
+    flat_g, tree = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(ef_state)
+    out = [leaf(g, e) for g, e in zip(flat_g, flat_e)]
+    return (
+        jax.tree.unflatten(tree, [o[0] for o in out]),
+        jax.tree.unflatten(tree, [o[1] for o in out]),
+    )

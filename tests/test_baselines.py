@@ -1,0 +1,60 @@
+"""Baseline indexes (IVF / HNSW-lite / Vamana-lite) sanity vs brute force."""
+import numpy as np
+import pytest
+
+from repro.core.baselines import BruteForce, HNSWLite, IVFIndex, VamanaLite, kmeans
+from repro.data import clustered_vectors
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    data, _ = clustered_vectors(1, n=3000, dim=24, n_clusters=32)
+    bf = BruteForce(data)
+    rng = np.random.default_rng(2)
+    qs = data[rng.integers(0, len(data), 15)] + 0.005 * rng.normal(size=(15, 24)).astype(np.float32)
+    gt = [set(bf.search(q, 10)[1].tolist()) for q in qs]
+    return data, qs, gt
+
+
+def _recall(idx_search, qs, gt, **kw):
+    rec = []
+    for q, g in zip(qs, gt):
+        _, ids = idx_search(q, 10, **kw)
+        rec.append(len(g & set(np.asarray(ids).tolist())) / 10)
+    return float(np.mean(rec))
+
+
+def test_kmeans_partitions(dataset):
+    data, _, _ = dataset
+    cent, assign = kmeans(data, 16, iters=5)
+    assert cent.shape == (16, 24)
+    assert assign.min() >= 0 and assign.max() < 16
+    # every cluster non-trivially used on clustered data
+    assert (np.bincount(assign, minlength=16) > 0).sum() >= 12
+
+
+def test_ivf_recall(dataset):
+    data, qs, gt = dataset
+    ivf = IVFIndex(data, n_lists=32, train_iters=5)
+    assert _recall(ivf.search, qs, gt, nprobe=8) >= 0.8
+
+
+def test_hnsw_recall(dataset):
+    data, qs, gt = dataset
+    h = HNSWLite(data, M=12, ef_construction=48)
+    assert _recall(h.search, qs, gt, ef=64) >= 0.8
+
+
+def test_vamana_recall(dataset):
+    data, qs, gt = dataset
+    v = VamanaLite(data, R=16, L_build=48)
+    assert _recall(v.search, qs, gt, complexity=64) >= 0.8
+
+
+def test_bruteforce_batch_matches_single(dataset):
+    data, qs, _ = dataset
+    bf = BruteForce(data)
+    d_b, i_b = bf.batch_search(qs[:4], 5)
+    for r in range(4):
+        d_s, i_s = bf.search(qs[r], 5)
+        np.testing.assert_array_equal(i_b[r], i_s)

@@ -1,0 +1,33 @@
+"""Per-(arch x shape) smoke: every one of the 40 assigned cells at reduced
+scale runs a REAL step on CPU (same cell-builder code path the dry-run
+lowers) with finite outputs and correct shapes."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ALL_CELLS, ALL_ARCHS, arch_shapes
+from repro.launch.cells import build_cell, example_inputs
+
+
+def test_cell_coverage_is_40():
+    assert len(ALL_CELLS) == 40
+    assert len(ALL_ARCHS) == 10
+
+
+@pytest.mark.parametrize("arch,shape", ALL_CELLS, ids=[f"{a}-{s}" for a, s in ALL_CELLS])
+def test_reduced_cell_runs_finite(arch, shape):
+    cell = build_cell(arch, shape, mesh_axes=None, reduced=True)
+    args = example_inputs(cell)
+    out = cell.fn(*args)
+    for leaf in jax.tree.leaves(out):
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            assert bool(jnp.all(jnp.isfinite(leaf))), f"non-finite in {arch}/{shape}"
+    if cell.kind == "train":
+        params, opt_state, metrics = out
+        assert float(metrics["loss"]) > 0
+        assert int(opt_state["step"]) == 1
+        # params actually moved
+        before = jax.tree.leaves(args[0])
+        after = jax.tree.leaves(params)
+        moved = any(bool(jnp.any(a != b)) for a, b in zip(after, before))
+        assert moved, "optimizer produced a no-op update"

@@ -1,0 +1,51 @@
+"""Data pipeline: determinism, sampler correctness."""
+import numpy as np
+
+from repro.data import CSRGraph, ctr_batch, lm_batch, random_graph, sample_hops
+
+
+def test_lm_batch_deterministic():
+    a = lm_batch(0, 5, batch=4, seq=16, vocab=100)
+    b = lm_batch(0, 5, batch=4, seq=16, vocab=100)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = lm_batch(0, 6, batch=4, seq=16, vocab=100)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    d = lm_batch(0, 5, batch=4, seq=16, vocab=100, shard=1)
+    assert not np.array_equal(a["tokens"], d["tokens"])
+
+
+def test_ctr_batch_fields_in_vocab():
+    b = ctr_batch(0, 0, batch=32, field_vocabs=(50, 20, 10), n_dense=3, seq_len=5, seq_fields=1)
+    assert b["cat"].shape == (32, 2)
+    assert b["cat"][:, 0].max() < 20 and b["cat"][:, 1].max() < 10
+    assert b["seq"].max() < 50
+    assert b["seq_mask"].sum(axis=1).min() >= 1
+
+
+def test_csr_and_sampler():
+    g = random_graph(0, n_nodes=100, n_edges=500, d_feat=8, n_classes=4)
+    csr = CSRGraph(100, g["edge_src"], g["edge_dst"])
+    assert csr.ptr[-1] == 500
+    # neighbors of v are exactly the srcs of edges into v
+    v = int(g["edge_dst"][0])
+    expect = sorted(g["edge_src"][g["edge_dst"] == v].tolist())
+    assert sorted(csr.neighbors(v).tolist()) == expect
+    rng = np.random.default_rng(0)
+    seeds = np.arange(10)
+    hops = sample_hops(csr, g["feats"], seeds, (4, 3), rng)
+    assert hops[0].shape == (10, 4, 3, 8)
+    assert hops[1].shape == (10, 4, 8)
+    assert hops[2].shape == (10, 8)
+    np.testing.assert_array_equal(hops[2], g["feats"][seeds])
+
+
+def test_sampled_neighbors_are_real_neighbors():
+    g = random_graph(1, n_nodes=50, n_edges=300, d_feat=4, n_classes=2)
+    csr = CSRGraph(50, g["edge_src"], g["edge_dst"])
+    rng = np.random.default_rng(1)
+    seeds = np.asarray([int(g["edge_dst"][0])])
+    from repro.data.graph import _sample_neighbors
+
+    nbrs = _sample_neighbors(csr, seeds, 8, rng)
+    real = set(csr.neighbors(seeds[0]).tolist())
+    assert set(nbrs[0].tolist()) <= real | {seeds[0]}

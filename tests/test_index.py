@@ -1,0 +1,199 @@
+"""eCP index: build invariants, cost model, incremental search semantics."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    ECPBuildConfig,
+    ECPIndex,
+    BatchedSearcher,
+    build_index,
+    derive_shape,
+    load_packed,
+)
+from repro.core import layout
+from repro.core.baselines import BruteForce
+from repro.data import clustered_vectors
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    data, _ = clustered_vectors(0, n=8000, dim=32, n_clusters=64)
+    path = tmp_path_factory.mktemp("idx") / "ecp"
+    cfg = ECPBuildConfig(levels=2, metric="l2", cluster_cap=64, seed=0)
+    store = build_index(data, str(path), cfg)
+    return data, str(path), store
+
+
+def test_cost_model_paper_example():
+    """Paper §3: N=1M, V=2304B, C=128KB -> l~17544, w~26."""
+    cap = 131072 // 2304  # 56 vectors
+    l, w, nodes = derive_shape(1_000_000, cap, 3)
+    assert l == -(-1_000_000 // cap)
+    assert w == 27  # ceil(17858^(1/3)); paper rounds to 26 with l=17544
+    assert nodes[-1] == l
+
+
+def test_all_items_indexed_exactly_once(built):
+    data, path, store = built
+    info = layout.IndexInfo.from_attrs(store.read_attrs(layout.INFO))
+    seen = []
+    for j in range(info.n_leaders):
+        ids = store.read_array(layout.node_ids(info.levels, j))
+        seen.extend(ids.tolist())
+    assert sorted(seen) == list(range(len(data)))
+
+
+def test_leaf_embeddings_match_items(built):
+    data, path, store = built
+    info = layout.IndexInfo.from_attrs(store.read_attrs(layout.INFO))
+    j = 0
+    ids = store.read_array(layout.node_ids(info.levels, j))
+    emb = store.read_array(layout.node_emb(info.levels, j))
+    np.testing.assert_allclose(
+        emb.astype(np.float32), data[ids].astype(np.float16).astype(np.float32)
+    )
+
+
+def test_internal_children_partition_leaders(built):
+    _, _, store = built
+    info = layout.IndexInfo.from_attrs(store.read_attrs(layout.INFO))
+    for lv in range(1, info.levels):
+        child_ids = []
+        for j in range(info.nodes_per_level[lv - 1]):
+            child_ids.extend(store.read_array(layout.node_ids(lv, j)).tolist())
+        assert sorted(child_ids) == list(range(info.nodes_per_level[lv]))
+
+
+def test_search_exact_hit(built):
+    data, path, _ = built
+    idx = ECPIndex(path)
+    res, qid = idx.new_search(data[42], k=5, b=8)
+    assert res[0][1] == 42
+    assert res[0][0] < 1e-2
+
+
+def test_incremental_no_duplicates_and_sorted(built):
+    data, path, _ = built
+    idx = ECPIndex(path)
+    res, qid = idx.new_search(data[7], k=50, b=4)
+    all_items = [i for _, i in res]
+    all_d = [d for d, _ in res]
+    for _ in range(5):
+        more = idx.get_next_k(qid, 50)
+        if not more:
+            break
+        all_items.extend(i for _, i in more)
+        all_d.extend(d for d, _ in more)
+    assert len(all_items) == len(set(all_items)), "incremental emitted a duplicate"
+    # distances non-decreasing within each emission batch by construction;
+    # the concatenated stream is globally sorted because I stays sorted
+    assert all_d == sorted(all_d)
+
+
+def test_incremental_matches_single_big_search(built):
+    """get_next_k continuation == one big search (same b schedule)."""
+    data, path, _ = built
+    q = data[3] + 0.01
+    idx1 = ECPIndex(path)
+    res1, qid = idx1.new_search(q, k=30, b=64, mx_inc=0)
+    idx2 = ECPIndex(path)
+    res2, qid2 = idx2.new_search(q, k=10, b=64, mx_inc=0)
+    stream = list(res2)
+    while len(stream) < 30:
+        nxt = idx2.get_next_k(qid2, 10)
+        if not nxt:
+            break
+        stream.extend(nxt)
+    assert [i for _, i in res1] == [i for _, i in stream[:30]]
+
+
+def test_recall_reasonable_on_clustered_data(built):
+    data, path, _ = built
+    idx = ECPIndex(path)
+    bf = BruteForce(data, "l2")
+    rng = np.random.default_rng(5)
+    qs = data[rng.integers(0, len(data), 20)] + 0.01 * rng.normal(size=(20, 32)).astype(np.float32)
+    recalls = []
+    for q in qs:
+        res, _ = idx.new_search(q, k=10, b=16)
+        gt = set(bf.search(q, 10)[1].tolist())
+        recalls.append(len(gt & {i for _, i in res}) / 10)
+    assert np.mean(recalls) >= 0.6, f"recall {np.mean(recalls)}"
+
+
+def test_filter_exclude_triggers_expansion(built):
+    """Paper §4.3 'Internal' case: filters shrink results; b doubles."""
+    data, path, _ = built
+    idx = ECPIndex(path)
+    res0, _ = idx.new_search(data[9], k=20, b=2, mx_inc=0)
+    exclude = {i for _, i in res0}
+    res, qid = idx.new_search(data[9], k=20, b=2, mx_inc=4, exclude=exclude)
+    got = {i for _, i in res}
+    assert not (got & exclude)
+    assert idx.QS[qid].increments > 0 or len(res) == 20
+
+
+def test_lru_cache_bound(built):
+    data, path, _ = built
+    idx = ECPIndex(path, cache_max_nodes=4)
+    for i in range(10):
+        idx.new_search(data[i * 100], k=10, b=8)
+    assert idx.cache.n_resident <= 4
+    assert idx.cache.evictions > 0
+
+
+def test_cache_off_frees_everything(built):
+    data, path, _ = built
+    idx = ECPIndex(path, cache_max_nodes=0)
+    idx.new_search(data[0], k=10, b=4)
+    assert idx.cache.n_resident == 0
+
+
+def test_prefetch_warms_cache(built):
+    data, path, _ = built
+    idx = ECPIndex(path)
+    idx.prefetch(up_to_level=1)
+    assert idx.cache.n_resident == idx.info.nodes_per_level[0]
+    loads_before = idx.load_node_count
+    idx.new_search(data[1], k=5, b=2)
+    # level-1 nodes already resident: only leaf loads remain
+    assert idx.load_node_count - loads_before <= idx.QS[0].stats.leaves_opened + 2
+
+
+def test_query_state_persistence(built):
+    data, path, _ = built
+    idx = ECPIndex(path)
+    res, qid = idx.new_search(data[11], k=10, b=4)
+    idx.save_query_state(qid)
+    idx2 = ECPIndex(path)
+    qid2 = idx2.load_query_state(qid)
+    more2 = idx2.get_next_k(qid2, 10)
+    more1 = idx.get_next_k(qid, 10)
+    assert [i for _, i in more1] == [i for _, i in more2]
+
+
+def test_batched_matches_host_on_first_k(built):
+    data, path, store = built
+    packed = load_packed(store)
+    bs = BatchedSearcher(packed)
+    rng = np.random.default_rng(3)
+    Q = data[rng.integers(0, len(data), 8)]
+    d, i, st = bs.search(Q, k=5, b=64, b_internal=packed.info.nodes_per_level[0])
+    idx = ECPIndex(path)
+    for r in range(8):
+        host, _ = idx.new_search(Q[r], k=5, b=64)
+        assert [x for _, x in host] == list(np.asarray(i)[r]), f"row {r}"
+
+
+def test_distance_calc_cost_model(built):
+    """Expanded-search cost (paper §3): w + (L-1)*b*w + b*cap, within 2x."""
+    data, path, _ = built
+    idx = ECPIndex(path)
+    b = 4
+    res, qid = idx.new_search(data[77], k=5, b=b, mx_inc=0)
+    st = idx.QS[qid].stats
+    info = idx.info
+    w = info.nodes_per_level[0]
+    cap = info.cluster_cap
+    predicted = w + (info.levels - 1) * b * w + b * cap
+    assert st.distance_calcs <= 2 * predicted + info.fanout * 4

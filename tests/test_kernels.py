@@ -1,0 +1,105 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.distance_topk import distance_topk_pallas, distance_topk_ref
+from repro.kernels.flash_attention import flash_attention_pallas, mha_ref
+
+RNG = np.random.default_rng(0)
+
+
+# ------------------------------------------------------------ distance_topk
+@pytest.mark.parametrize("metric", ["l2", "ip", "cosine"])
+@pytest.mark.parametrize(
+    "B,N,D,k,bq,bn",
+    [
+        (4, 256, 64, 8, 64, 128),
+        (130, 1000, 128, 16, 128, 128),   # non-divisible B and N
+        (1, 64, 32, 64, 8, 64),           # k == N
+        (16, 512, 256, 32, 64, 256),
+    ],
+)
+def test_distance_topk_matches_ref(metric, B, N, D, k, bq, bn):
+    q = jnp.asarray(RNG.normal(size=(B, D)), jnp.float32)
+    c = jnp.asarray(RNG.normal(size=(N, D)), jnp.float32)
+    d1, i1 = distance_topk_pallas(q, c, k, metric, bq=bq, bn=bn, interpret=True)
+    d0, i0 = distance_topk_ref(q, c, k, metric)
+    np.testing.assert_allclose(np.asarray(d0), np.asarray(d1), rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.float16])
+def test_distance_topk_dtypes(dtype):
+    q = jnp.asarray(RNG.normal(size=(8, 64)), dtype)
+    c = jnp.asarray(RNG.normal(size=(300, 64)), dtype)
+    d1, i1 = distance_topk_pallas(q, c, 10, "l2", bq=8, bn=128, interpret=True)
+    d0, i0 = distance_topk_ref(q.astype(jnp.float32), c.astype(jnp.float32), 10, "l2")
+    # low precision inputs: compare distances loosely, ids by recall
+    rec = np.mean(
+        [len(set(np.asarray(i0)[r]) & set(np.asarray(i1)[r])) / 10 for r in range(8)]
+    )
+    assert rec >= 0.9
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    B=st.integers(1, 17),
+    N=st.integers(8, 300),
+    D=st.integers(4, 96),
+    metric=st.sampled_from(["l2", "ip"]),
+    data=st.data(),
+)
+def test_distance_topk_property(B, N, D, metric, data):
+    k = data.draw(st.integers(1, min(N, 32)))
+    seed = data.draw(st.integers(0, 2**31))
+    r = np.random.default_rng(seed)
+    q = jnp.asarray(r.normal(size=(B, D)), jnp.float32)
+    c = jnp.asarray(r.normal(size=(N, D)), jnp.float32)
+    d1, i1 = distance_topk_pallas(q, c, k, metric, bq=8, bn=64, interpret=True)
+    d0, i0 = distance_topk_ref(q, c, k, metric)
+    np.testing.assert_allclose(np.asarray(d0), np.asarray(d1), rtol=1e-3, atol=1e-3)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+
+
+# ---------------------------------------------------------- flash attention
+@pytest.mark.parametrize(
+    "B,Hq,Hkv,Sq,Skv,d,causal,lens",
+    [
+        (2, 4, 2, 128, 128, 64, True, None),
+        (2, 4, 4, 128, 128, 64, False, None),
+        (1, 8, 2, 64, 256, 32, True, None),      # chunked prefill
+        (2, 4, 2, 1, 192, 64, True, (100, 192)),  # ragged decode
+        (2, 2, 1, 100, 100, 64, True, None),      # non-divisible seq
+        (1, 2, 2, 256, 256, 128, True, None),     # MXU-aligned d
+    ],
+)
+def test_flash_attention_matches_ref(B, Hq, Hkv, Sq, Skv, d, causal, lens):
+    q = jnp.asarray(RNG.normal(size=(B, Hq, Sq, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, Hkv, Skv, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, Hkv, Skv, d)), jnp.float32)
+    kv_lens = None if lens is None else jnp.asarray(lens, jnp.int32)
+    o1 = flash_attention_pallas(q, k, v, kv_lens=kv_lens, causal=causal, bq=64, bk=64, interpret=True)
+    o0 = mha_ref(q, k, v, causal=causal, kv_lens=kv_lens)
+    np.testing.assert_allclose(np.asarray(o0), np.asarray(o1), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    q = jnp.asarray(RNG.normal(size=(1, 4, 128, 64)), jnp.bfloat16)
+    k = jnp.asarray(RNG.normal(size=(1, 2, 128, 64)), jnp.bfloat16)
+    v = jnp.asarray(RNG.normal(size=(1, 2, 128, 64)), jnp.bfloat16)
+    o1 = flash_attention_pallas(q, k, v, causal=True, bq=64, bk=64, interpret=True)
+    o0 = mha_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o0), np.asarray(o1), rtol=2e-2, atol=2e-2)
+
+
+def test_flash_attention_numerics_extreme():
+    """Large logits must not overflow the online softmax."""
+    q = 30.0 * jnp.ones((1, 1, 64, 32), jnp.float32)
+    k = 30.0 * jnp.ones((1, 1, 64, 32), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(1, 1, 64, 32)), jnp.float32)
+    o1 = flash_attention_pallas(q, k, v, causal=True, bq=32, bk=32, interpret=True)
+    assert bool(jnp.all(jnp.isfinite(o1)))

@@ -1,0 +1,98 @@
+"""Optimizer, schedules, gradient compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.optim import (
+    adamw,
+    apply_updates,
+    compress_decompress,
+    constant,
+    global_norm,
+    init_ef_state,
+    warmup_cosine,
+)
+
+
+def test_adamw_converges_quadratic():
+    opt = adamw(0.1, wd=0.0)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = opt.init(params)
+    target = jnp.asarray([1.0, 2.0])
+    loss = lambda p: jnp.sum((p["w"] - target) ** 2)
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        upd, state = opt.update(g, state, params)
+        params = apply_updates(params, upd)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target), atol=1e-2)
+
+
+def test_adamw_weight_decay_skips_1d():
+    opt = adamw(0.1, wd=0.5)
+    params = {"w": jnp.ones((2, 2)), "b": jnp.ones((2,))}
+    state = opt.init(params)
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    upd, _ = opt.update(zeros, state, params)
+    assert float(jnp.max(jnp.abs(upd["b"]))) == 0.0
+    assert float(jnp.max(jnp.abs(upd["w"]))) > 0.0
+
+
+def test_clipping_bounds_update():
+    opt = adamw(1.0, clip=1.0, wd=0.0)
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+    g = {"w": jnp.asarray([1e6, -1e6, 1e6])}
+    upd, _ = opt.update(g, state, params)
+    assert np.isfinite(np.asarray(upd["w"])).all()
+
+
+def test_bf16_moments_still_converge():
+    opt = adamw(0.1, wd=0.0, moment_dtype=jnp.bfloat16)
+    params = {"w": jnp.asarray([4.0])}
+    state = opt.init(params)
+    assert state["mu"]["w"].dtype == jnp.bfloat16
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    for _ in range(100):
+        g = jax.grad(loss)(params)
+        upd, state = opt.update(g, state, params)
+        params = apply_updates(params, upd)
+    assert abs(float(params["w"][0])) < 0.1
+
+
+def test_schedule_shapes():
+    f = warmup_cosine(1.0, 10, 100)
+    assert float(f(jnp.asarray(0))) == 0.0
+    assert abs(float(f(jnp.asarray(10))) - 1.0) < 1e-6
+    assert float(f(jnp.asarray(100))) < float(f(jnp.asarray(50)))
+    assert float(constant(0.5)(jnp.asarray(7))) == 0.5
+
+
+def test_compression_error_feedback_unbiased_over_steps():
+    """EF property: accumulated compressed grads track accumulated true
+    grads (residual stays bounded), even though each step is lossy."""
+    rng = np.random.default_rng(0)
+    g_true = [{"w": jnp.asarray(rng.normal(size=64), jnp.float32)} for _ in range(50)]
+    ef = init_ef_state(g_true[0])
+    total_c = jnp.zeros(64)
+    total_t = jnp.zeros(64)
+    for g in g_true:
+        dec, ef = compress_decompress(g, ef)
+        total_c = total_c + dec["w"]
+        total_t = total_t + g["w"]
+    resid = float(jnp.max(jnp.abs(total_c - total_t)))
+    # residual is bounded by one quantization step, not O(n_steps)
+    assert resid < 0.2, resid
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31))
+def test_quantize_roundtrip_bounded(seed):
+    from repro.optim.compress import dequantize_int8, quantize_int8
+
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.normal(size=32) * r.uniform(0.01, 100), jnp.float32)
+    q, s = quantize_int8(x)
+    err = jnp.max(jnp.abs(dequantize_int8(q, s) - x))
+    assert float(err) <= float(s) / 2 + 1e-6
