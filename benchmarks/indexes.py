@@ -1,20 +1,20 @@
 """Shared index construction for the table benchmarks — build once, reuse.
 
 Emulates the paper's §5 setup at CPU-tractable scale: one collection, four
-indexes (eCP-FS + IVF + HNSW + Vamana/DiskANN-lite), matched parameters
-(eCP b == IVF nprobe; graph indexes use search complexity ~= k).
+indexes (eCP-FS + IVF + HNSW + Vamana/DiskANN-lite), matched parameters.
+Every index is exposed as a unified ``Searcher`` (repro.core.api); the
+per-index effort knob lives in ``params["b"]`` (eCP expansion b == IVF
+nprobe; graph indexes use search complexity ~= k, as the paper matches
+them).
 """
 from __future__ import annotations
 
-import shutil
 import tempfile
 import time
 from dataclasses import dataclass
 from pathlib import Path
 
-import numpy as np
-
-from repro.core import ECPBuildConfig, ECPIndex, BatchedSearcher, build_index, load_packed
+from repro.core import ECPBuildConfig, ECPIndex, build_index, open_index
 from repro.core.baselines import BruteForce, HNSWLite, IVFIndex, VamanaLite
 
 from .mmir import MMIRDataset, make_dataset
@@ -35,7 +35,18 @@ class BenchSuite:
     params: dict
 
     def fresh_ecp(self, **kw) -> ECPIndex:
-        return ECPIndex(self.ecp_path, **kw)
+        """A cold file-mode searcher (empty node cache — 'disk' runs)."""
+        return open_index(self.ecp_path, mode="file", **kw)
+
+    def searchers(self) -> dict:
+        """name -> (Searcher, effort b) for every index in the suite."""
+        p = self.params
+        return {
+            "eCP-FS": (self.fresh_ecp(), p["b"]["eCP-FS"]),
+            "IVF": (self.ivf, p["b"]["IVF"]),
+            "HNSW": (self.hnsw, p["b"]["HNSW"]),
+            "DiskANN-lite": (self.vamana, p["b"]["DiskANN-lite"]),
+        }
 
 
 _SUITE: BenchSuite | None = None
@@ -73,6 +84,9 @@ def get_suite(*, n_items=20000, dim=32, n_tasks=40, seed=0, workdir=None) -> Ben
         ds=ds, ecp_path=ecp_path, ecp_build_s=ecp_build,
         ivf=ivf, ivf_build_s=ivf_build, hnsw=hnsw, hnsw_build_s=hnsw_build,
         vamana=vamana, vamana_build_s=vamana_build, bf=BruteForce(ds.data),
-        params={"b": 16, "nprobe": 16, "ef": 100, "complexity": 100, "k": 100},
+        params={
+            "k": 100,
+            "b": {"eCP-FS": 16, "IVF": 16, "HNSW": 100, "DiskANN-lite": 100},
+        },
     )
     return _SUITE

@@ -10,9 +10,10 @@ information = less query noise), exactly like LSC's 6-step / VBS's 3-step
 textual hints. A task is SOLVED if any of its queries ranks the target in
 the top-k (paper's criterion, k=100).
 
-All indexes plug in through a 2-function protocol:
-  search(q, k)            -> (dists, ids)
-  (optional) next_k(...)  -> incremental continuation (eCP-FS only)
+All indexes plug in as unified ``Searcher`` objects (repro.core.api):
+``search(q, k, *, b) -> ResultSet``; continuations go through the
+``ResultSet.query`` handle — eCP-FS resumes natively, the baselines'
+``RestartQuery`` re-searches with ``emitted + k`` (the paper's protocol).
 """
 from __future__ import annotations
 
@@ -82,17 +83,21 @@ class WorkloadResult:
         }
 
 
-def single_query_workload(ds: MMIRDataset, name, search_fn, *, k=100, runs=4, load_s=0.0, reset_fn=None):
-    """Paper workload 1: every query top-k, repeated; run 0 is 'disk'."""
+def single_query_workload(ds: MMIRDataset, name, searcher, *, k=100, b=None, runs=4, load_s=0.0, reset_fn=None):
+    """Paper workload 1: every query top-k, repeated; run 0 is 'disk'.
+
+    ``reset_fn() -> Searcher`` (optional) returns a cold instance for the
+    first run (e.g. a fresh file-mode index with an empty node cache).
+    """
     res = WorkloadResult(name=name, load_s=load_s)
     queries = [q for t in ds.tasks for q in t.queries]
     for r in range(runs):
         if r == 0 and reset_fn is not None:
-            reset_fn()
+            searcher = reset_fn()
         t_run = time.perf_counter()
         for q in queries:
             t0 = time.perf_counter()
-            search_fn(q, k)
+            searcher.search(q, k, b=b)
             dt = time.perf_counter() - t0
             (res.lat_first_s if r == 0 else res.lat_warm_s).append(dt)
         res.workload_s.append(time.perf_counter() - t_run)
@@ -101,19 +106,19 @@ def single_query_workload(ds: MMIRDataset, name, search_fn, *, k=100, runs=4, lo
     for t in ds.tasks:
         ok = False
         for q in t.queries:
-            _, ids = search_fn(q, k)
-            if t.target in set(np.asarray(ids).reshape(-1).tolist()):
+            rs = searcher.search(q, k, b=b)
+            if t.target in set(rs.row_ids(0)):
                 ok = True
                 break
         res.solved += int(ok)
     return res
 
 
-def incremental_workload(ds: MMIRDataset, name, new_search_fn, next_k_fn, *, k=100, rounds=10, runs=3, load_s=0.0):
+def incremental_workload(ds: MMIRDataset, name, searcher, *, k=100, b=None, rounds=10, runs=3, load_s=0.0):
     """Paper workload 2: top-k then `rounds` x 'k more' per query.
 
-    For indexes without native continuation, next_k_fn should re-run with
-    k + k*round (the paper's protocol for IVF/HNSW/DiskANN).
+    Continuation is the searcher's own ``Query`` handle: eCP-FS resumes its
+    frontier, baselines restart with k + k*round via ``RestartQuery``.
     """
     res = WorkloadResult(name=name, load_s=load_s)
     queries = [q for t in ds.tasks for q in t.queries]
@@ -121,13 +126,14 @@ def incremental_workload(ds: MMIRDataset, name, new_search_fn, next_k_fn, *, k=1
         t_run = time.perf_counter()
         for q in queries:
             t0 = time.perf_counter()
-            handle = new_search_fn(q, k)
+            rs = searcher.search(q, k, b=b)
             dt0 = time.perf_counter() - t0
             (res.lat_first_s if r == 0 else res.lat_warm_s).append(dt0)
             for rd in range(rounds):
                 t1 = time.perf_counter()
-                next_k_fn(handle, q, k, rd)
+                rs.query.next(k)
                 res.lat_warm_s.append(time.perf_counter() - t1)
+            rs.query.close()
         res.workload_s.append(time.perf_counter() - t_run)
     res.n_tasks = len(ds.tasks)
     return res

@@ -1,5 +1,6 @@
 """Table 3: tasks completed per index (1 ground-truth item in top-100 for
-any of the task's queries) — plus recall@100 vs exact search."""
+any of the task's queries) — plus recall@100 vs exact search.  Every index,
+brute force included, answers through the unified ``Searcher`` API."""
 from __future__ import annotations
 
 import numpy as np
@@ -9,31 +10,17 @@ from .indexes import get_suite
 
 def run() -> list[dict]:
     s = get_suite()
-    p = s.params
-    ecp = s.fresh_ecp()
-
-    def ecp_search(q, k):
-        res, qid = ecp.new_search(q, k, b=p["b"])
-        ecp.drop_query(qid)
-        return None, np.asarray([i for _, i in res])
-
-    searchers = {
-        "eCP-FS": ecp_search,
-        "IVF": lambda q, k: s.ivf.search(q, k, nprobe=p["nprobe"]),
-        "HNSW": lambda q, k: s.hnsw.search(q, k, ef=p["ef"]),
-        "DiskANN-lite": lambda q, k: s.vamana.search(q, k, complexity=p["complexity"]),
-    }
+    k = s.params["k"]
     rows = []
-    for name, fn in searchers.items():
+    for name, (searcher, b) in s.searchers().items():
         solved = 0
         recalls = []
         for t in s.ds.tasks:
             ok = False
             for q in t.queries:
-                _, ids = fn(q, p["k"])
-                ids = set(np.asarray(ids).reshape(-1).tolist())
-                gt = set(s.bf.search(q, p["k"])[1].tolist())
-                recalls.append(len(ids & gt) / p["k"])
+                ids = set(searcher.search(q, k, b=b).row_ids(0))
+                gt = set(s.bf.search(q, k).row_ids(0))
+                recalls.append(len(ids & gt) / k)
                 ok = ok or (t.target in ids)
             solved += int(ok)
         rows.append(

@@ -1,13 +1,13 @@
 """Table 4: incremental search workload — top-100 then 10 x '100 more'.
 
-eCP-FS resumes from its query state (Algorithms 1-3); the baselines have no
-continuation so each round re-searches with k + k*round (the paper's
-protocol), which is exactly why eCP-FS dominates this table."""
+Every index runs the SAME loop over the unified API: search once, then
+``rounds`` calls to ``ResultSet.query.next(k)``.  eCP-FS resumes from its
+query state (Algorithms 1-3); the baselines have no continuation, so their
+``RestartQuery`` handle re-searches with k + k*round (the paper's
+protocol) — which is exactly why eCP-FS dominates this table."""
 from __future__ import annotations
 
 import time
-
-import numpy as np
 
 from .indexes import get_suite
 from .mmir import incremental_workload
@@ -16,38 +16,23 @@ from .mmir import incremental_workload
 def run(rounds: int = 10, runs: int = 2) -> list[dict]:
     s = get_suite()
     p = s.params
+    k = p["k"]
     rows = []
 
-    # --- eCP-FS: native continuation via query states
+    # --- eCP-FS: native continuation via its query handle
     t0 = time.perf_counter()
     ecp = s.fresh_ecp()
     load_s = time.perf_counter() - t0
-
-    def ecp_new(q, k):
-        res, qid = ecp.new_search(q, k, b=p["b"])
-        return qid
-
-    def ecp_next(qid, q, k, rd):
-        return ecp.get_next_k(qid, k)
-
     r = incremental_workload(
-        s.ds, "eCP-FS", ecp_new, ecp_next, k=p["k"], rounds=rounds, runs=runs, load_s=load_s
+        s.ds, "eCP-FS", ecp, k=k, b=p["b"]["eCP-FS"],
+        rounds=rounds, runs=runs, load_s=load_s,
     )
     rows.append(r.row())
 
-    # --- baselines: restart with k + k*rd
-    def mk(name, fn):
-        def new(q, k):
-            fn(q, k)
-            return None
-
-        def nxt(_h, q, k, rd):
-            fn(q, k + k * (rd + 1))
-
-        rr = incremental_workload(s.ds, name, new, nxt, k=p["k"], rounds=rounds, runs=runs)
+    # --- baselines: RestartQuery re-searches with k + k*round internally
+    for name, searcher in (("IVF", s.ivf), ("HNSW", s.hnsw), ("DiskANN-lite", s.vamana)):
+        rr = incremental_workload(
+            s.ds, name, searcher, k=k, b=p["b"][name], rounds=rounds, runs=runs
+        )
         rows.append(rr.row())
-
-    mk("IVF", lambda q, k: s.ivf.search(q, k, nprobe=p["nprobe"]))
-    mk("HNSW", lambda q, k: s.hnsw.search(q, k, ef=max(p["ef"], 100)))
-    mk("DiskANN-lite", lambda q, k: s.vamana.search(q, k, complexity=max(p["complexity"], 100)))
     return rows

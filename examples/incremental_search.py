@@ -1,45 +1,52 @@
 """Incremental retrieval deep-dive (paper §4.3): filters that trigger the
-internal b-doubling, external get-next-k sessions, and query-state
-persistence INSIDE the index's own file structure.
+internal b-doubling, external get-next-k sessions via Query handles, and
+query-state persistence INSIDE the index's own file structure.
 
     PYTHONPATH=src python examples/incremental_search.py
 """
 import tempfile
 
-import numpy as np
-
-from repro.core import ECPBuildConfig, ECPIndex, build_index
+from repro.core import ECPBuildConfig, QueryClosedError, build_index, open_index
 from repro.data import clustered_vectors
 
 with tempfile.TemporaryDirectory() as td:
     path = td + "/idx"
     data, _ = clustered_vectors(7, n=30_000, dim=64, n_clusters=128)
     build_index(data, path, ECPBuildConfig(levels=2, cluster_cap=150))
-    index = ECPIndex(path)
+    index = open_index(path, mode="file")
     q = data[42]
 
     # -- External continuation: a long-running session asking for more
-    res, qid = index.new_search(q, k=20, b=4)
-    print(f"q_id={qid}: first 20, best dist {res[0][0]:.4f}")
+    rs = index.search(q, k=20, b=4)
+    print(f"first 20, best dist {rs.pairs()[0][0]:.4f}")
+    handle = rs.query
     for round_ in range(3):
-        more = index.get_next_k(qid, 20)
+        more = handle.next(20)
         print(f"  round {round_}: {len(more)} more, "
-              f"b={index.QS[qid].b}, leaves={index.QS[qid].stats.leaves_opened}")
+              f"b={handle.b}, leaves={handle.stats.leaves_opened}")
 
     # -- Internal continuation: filters starve the result set; the search
     #    resumes itself, doubling b (paper's 'Internal' case)
-    blocked = {i for _, i in res}          # pretend a filter rejects these
-    res2, qid2 = index.new_search(q, k=20, b=2, mx_inc=6, exclude=blocked)
-    st = index.QS[qid2]
-    print(f"\nfiltered search: got {len(res2)} (none in filter: "
-          f"{not ({i for _, i in res2} & blocked)}), b grew to {st.b} "
+    blocked = {i for _, i in rs.pairs()}   # pretend a filter rejects these
+    rs2 = index.search(q, k=20, b=2, mx_inc=6, exclude=blocked)
+    st = rs2.query.stats
+    print(f"\nfiltered search: got {len(rs2)} (none in filter: "
+          f"{not ({i for _, i in rs2.pairs()} & blocked)}), b grew to {rs2.query.b} "
           f"({st.increments} doublings)")
 
     # -- Persistence: the query state is saved INTO the file structure and
     #    resumed by a completely fresh process/index instance (paper §6.2)
-    index.save_query_state(qid)
-    fresh = ECPIndex(path)
-    qid_re = fresh.load_query_state(qid)
-    a = index.get_next_k(qid, 10)
-    b = fresh.get_next_k(qid_re, 10)
-    print("\npersisted continuation identical:", [i for _, i in a] == [i for _, i in b])
+    token = handle.save()
+    fresh = open_index(path, mode="file")
+    resumed = fresh.load_query(token)
+    a = handle.next(10)
+    b = resumed.next(10)
+    print(f"\npersisted continuation ({token!r}) identical:",
+          [i for _, i in a.pairs()] == [i for _, i in b.pairs()])
+
+    # -- Closing a handle frees its state; further use is a clear error
+    handle.close()
+    try:
+        handle.next(10)
+    except QueryClosedError as e:
+        print("closed handle raises:", e)

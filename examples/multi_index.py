@@ -1,6 +1,9 @@
 """The paper's headline scenario: SEVERAL co-located indexes under one
-tight memory budget — per-index LRU node caps keep the total footprint
-fixed while every collection stays searchable (paper §1, §6.1).
+tight memory budget (paper §1, §6.1) — now as ONE shared byte-budget
+cache.  A ``MultiIndexSession`` opens every collection into a single
+globally-LRU ``NodeCache``: a node loaded for any index can evict the
+coldest node of any other, so hot collections naturally take more of the
+budget, and the limit is changeable at run-time (paper §4.2, fleet-wide).
 
     PYTHONPATH=src python examples/multi_index.py
 """
@@ -8,36 +11,44 @@ import tempfile
 
 import numpy as np
 
-from repro.core import ECPBuildConfig, ECPIndex, build_index
+from repro.core import ECPBuildConfig, MultiIndexSession, build_index
 from repro.data import clustered_vectors
 
 COLLECTIONS = {"lifelog": 0, "video_kf": 1, "docs": 2}
-BUDGET_NODES = 24          # global node budget across ALL indexes
+BUDGET_BYTES = 3 << 19          # 1.5 MiB of node data across ALL indexes
 
 with tempfile.TemporaryDirectory() as td:
-    indexes = {}
+    session = MultiIndexSession(cache_bytes=BUDGET_BYTES)
+    datasets = {}
     for name, seed in COLLECTIONS.items():
         data, _ = clustered_vectors(seed, n=20_000, dim=64, n_clusters=96)
         path = f"{td}/{name}"
         build_index(data, path, ECPBuildConfig(levels=2, cluster_cap=150))
-        indexes[name] = (ECPIndex(path, cache_max_nodes=BUDGET_NODES // len(COLLECTIONS)), data)
+        session.open(path, name=name)
+        datasets[name] = data
 
     rng = np.random.default_rng(9)
     for round_ in range(3):
-        for name, (idx, data) in indexes.items():
+        for name, data in datasets.items():
             q = data[rng.integers(0, len(data))]
-            res, qid = idx.new_search(q, k=5, b=4)
-            print(f"[{name:9s}] hit={res[0][1]:6d} d={res[0][0]:.4f} "
-                  f"resident={idx.cache.n_resident:2d} "
-                  f"bytes={idx.cache.resident_bytes/2**20:6.2f} MiB "
-                  f"evictions={idx.cache.evictions}")
+            rs = session.search(name, q, k=5, b=4)
+            st = session.stats()
+            mine = st["per_index"][name]
+            print(f"[{name:9s}] hit={rs.pairs()[0][1]:6d} d={rs.pairs()[0][0]:.4f} "
+                  f"mine={mine['bytes']/2**20:5.2f} MiB "
+                  f"total={st['resident_bytes']/2**20:5.2f}/{BUDGET_BYTES/2**20:.1f} MiB "
+                  f"evictions={st['evictions']}")
 
-    total = sum(i.cache.resident_bytes for i, _ in indexes.values())
-    print(f"\ntotal resident node data across 3 indexes: {total/2**20:.2f} MiB "
-          f"(vs {sum(20000*64*4 for _ in indexes)/2**20:.0f} MiB if fully loaded)")
+    st = session.stats()
+    assert st["resident_bytes"] <= BUDGET_BYTES
+    full = sum(20000 * 64 * 4 for _ in COLLECTIONS)
+    print(f"\nshared budget held: {st['resident_bytes']/2**20:.2f} MiB resident "
+          f"across 3 indexes, {st['evictions']} evictions "
+          f"(vs {full/2**20:.0f} MiB if fully loaded)")
 
-    # runtime-tunable: shrink the budget live (paper: limit changeable at run-time)
-    for name, (idx, _) in indexes.items():
-        idx.cache.resize(2)
-    print("after live resize to 2 nodes/index:",
-          {n: i.cache.n_resident for n, (i, _) in indexes.items()})
+    # runtime-tunable: shrink the FLEET budget live (paper: limit
+    # changeable at run-time — here one knob governs every index)
+    session.resize(cache_bytes=1 << 19)
+    st = session.stats()
+    print(f"after live resize to 0.5 MiB: {st['resident_bytes']/2**20:.2f} MiB resident, "
+          f"per-index: { {n: v['nodes'] for n, v in st['per_index'].items()} }")

@@ -9,7 +9,7 @@ import tempfile
 
 import numpy as np
 
-from repro.core import ECPBuildConfig, ECPIndex, build_index
+from repro.core import ECPBuildConfig, build_index, open_index
 from repro.data import clustered_vectors
 
 with tempfile.TemporaryDirectory() as td:
@@ -31,13 +31,15 @@ with tempfile.TemporaryDirectory() as td:
           sorted(p.name for p in (node0 / "embeddings").iterdir() if not p.name.startswith(".")))
 
     # 4) search with a bounded memory footprint (LRU over 32 nodes)
-    index = ECPIndex(str(path), cache_max_nodes=32)
+    index = open_index(str(path), mode="file", cache_max_nodes=32)
     q = data[1234] + 0.01 * np.random.default_rng(1).normal(size=128).astype(np.float32)
-    results, qid = index.new_search(q, k=10, b=8)
-    print("\ntop-10:", [(round(d, 3), i) for d, i in results])
+    rs = index.search(q, k=10, b=8)
+    print("\ntop-10:", [(round(d, 3), i) for d, i in rs.pairs()])
 
-    # 5) incremental: 10 more WITHOUT re-searching (query state + T queue)
-    more = index.get_next_k(qid, 10)
-    print("next-10:", [(round(d, 3), i) for d, i in more])
-    print("stats:", index.QS[qid].stats)
+    # 5) incremental: 10 more WITHOUT re-searching — the ResultSet's Query
+    #    handle owns the frontier (T queue) and resumes from it
+    more = rs.query.next(10)
+    print("next-10:", [(round(d, 3), i) for d, i in more.pairs()])
+    print("stats:", rs.query.stats)
     print("cache resident nodes:", index.cache.n_resident, "(bound 32)")
+    rs.query.close()

@@ -1,24 +1,52 @@
 """eCP-FS core: the paper's contribution as a composable library.
 
-Public API:
+Public API (everything speaks core/api.py's unified shape):
+  Searcher / ResultSet / Query     — the retrieval protocol: any searcher's
+                                     ``search(q, k, *, b)`` returns a
+                                     ``ResultSet`` whose ``.query`` handle
+                                     owns incremental state
+  open_index(path, mode)           — file | packed | auto searcher factory
+  MultiIndexSession                — N indexes under one shared byte-budget
+                                     NodeCache (global LRU, live-resizable)
   build_index / ECPBuildConfig     — top-down index construction (build.py)
-  ECPIndex                         — file-structure retrieval with LRU cache
+  ECPIndex / ECPQuery              — file-structure retrieval with LRU cache
                                      and incremental search (search.py)
-  BatchedSearcher                  — TPU-native batched beam search (batched.py)
+  BatchedSearcher / BatchedQuery   — TPU-native batched beam search (batched.py)
   FStore                           — the transparent zarr-v2 file store
   load_packed / PackedIndex        — dense device view of the hierarchy
   baselines                        — BruteForce / IVF / HNSWLite / VamanaLite
 """
+from .api import (
+    MultiIndexSession,
+    NodeCache,
+    Query,
+    QueryClosedError,
+    RestartQuery,
+    ResultSet,
+    Searcher,
+    SearchStats,
+    open_index,
+)
 from .build import ECPBuildConfig, build_index
-from .batched import BatchedQueryState, BatchedSearcher
+from .batched import BatchedQuery, BatchedQueryState, BatchedSearcher
 from .fstore import FStore
 from .layout import IndexInfo, derive_shape
 from .packed import PackedIndex, load_packed
-from .search import ECPIndex, NodeCache, QueryState, SearchStats
+from .search import ECPIndex, ECPQuery, QueryState
 
 __all__ = [
+    "Searcher",
+    "ResultSet",
+    "Query",
+    "QueryClosedError",
+    "RestartQuery",
+    "SearchStats",
+    "NodeCache",
+    "open_index",
+    "MultiIndexSession",
     "ECPBuildConfig",
     "build_index",
+    "BatchedQuery",
     "BatchedQueryState",
     "BatchedSearcher",
     "FStore",
@@ -27,7 +55,6 @@ __all__ = [
     "PackedIndex",
     "load_packed",
     "ECPIndex",
-    "NodeCache",
+    "ECPQuery",
     "QueryState",
-    "SearchStats",
 ]

@@ -1,0 +1,435 @@
+"""Unified retrieval API — the one seam every searcher implements.
+
+The paper's headline scenario is many ANN indexes co-located under a tight
+memory budget (§1, §6.1).  Before this module each searcher had its own
+call shape: ``ECPIndex`` handed out raw int query ids into an append-only
+``QS`` list, ``BatchedSearcher`` threaded ``(q, state)`` tuples by hand,
+and the baselines returned bare ``(dists, ids)`` tuples.  This module
+defines the single shape all of them speak:
+
+  * ``Searcher``   — protocol: ``search(q, k, *, b) -> ResultSet``.  ``q``
+    is one vector ``[D]`` or a batch ``[B, D]``; ``b`` is the generic
+    search-effort knob (eCP expansion b, IVF nprobe, HNSW ef, Vamana
+    complexity, batched leaf-scan width).
+  * ``ResultSet``  — ``dists``/``ids`` numpy arrays (``[k]`` for a single
+    query, ``[B, k]`` for a batch; short result lists are padded with
+    ``+inf``/``-1``), per-query ``SearchStats``, and the ``Query`` handle
+    that owns any incremental state.
+  * ``Query``      — handle with ``.next(k)`` (more results), ``.save()``
+    (persist the frontier into the index's own file structure, eCP-FS
+    only), and ``.close()``; a closed handle raises ``QueryClosedError``
+    instead of the old silent ``None``-hole crash.
+  * ``RestartQuery`` — the continuation for searchers without native
+    incremental state: ``.next(k)`` re-searches with ``emitted + k`` and
+    returns the tail (the paper's restart protocol for IVF/HNSW/DiskANN).
+
+On top of the protocol:
+
+  * ``open_index(path, mode="file"|"packed"|"auto")`` — factory returning
+    the file-structure searcher (``ECPIndex``) or the device-resident one
+    (``BatchedSearcher``).
+  * ``MultiIndexSession`` — N indexes under ONE shared byte-budget
+    ``NodeCache``: a global LRU across indexes, runtime-resizable (the
+    paper's §4.2 knob made fleet-wide).
+
+``NodeCache`` and ``SearchStats`` live here (not in search.py) because the
+cache is shared infrastructure: the session layer budgets it in bytes
+across indexes, each ``ECPIndex`` namespaces its keys into it.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
+__all__ = [
+    "SearchStats",
+    "NodeCache",
+    "ResultSet",
+    "Query",
+    "QueryClosedError",
+    "RestartQuery",
+    "Searcher",
+    "open_index",
+    "MultiIndexSession",
+]
+
+_UNSET = object()
+
+
+class QueryClosedError(RuntimeError):
+    """Raised when ``next``/``save`` is called on a closed Query handle."""
+
+
+@dataclass
+class SearchStats:
+    node_loads: int = 0            # disk reads (cache misses served from files)
+    nodes_opened: int = 0          # total nodes popped from T
+    leaves_opened: int = 0
+    distance_calcs: int = 0        # individual distance computations
+    increments: int = 0            # b-doublings
+
+
+# --------------------------------------------------------------------- cache
+class NodeCache:
+    """LRU cache over (namespace, level, node) -> (embeddings f32, ids).
+
+    Two independent budgets, both tunable at runtime (paper §4.2):
+      ``max_nodes``:  None = unbounded; 0 = caching off; n > 0 = at most n
+                      resident nodes.
+      ``max_bytes``:  None = unbounded; 0 = caching off; n > 0 = resident
+                      node data (embeddings + ids) capped at n bytes — the
+                      fleet-wide knob ``MultiIndexSession`` shares across
+                      indexes.
+
+    Keys carry a namespace tag so several indexes can share one cache
+    without collisions; eviction is globally LRU across all of them.
+    """
+
+    def __init__(self, max_nodes: int | None = None, *, max_bytes: int | None = None):
+        self.max_nodes = max_nodes
+        self.max_bytes = max_bytes
+        self._d: OrderedDict[tuple, tuple[np.ndarray, np.ndarray]] = OrderedDict()
+        self._nbytes = 0
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    @staticmethod
+    def _entry_bytes(value) -> int:
+        emb, ids = value
+        return int(emb.nbytes) + int(ids.nbytes)
+
+    def resize(self, max_nodes=_UNSET, *, max_bytes=_UNSET) -> None:
+        """Change either budget live; evicts immediately if shrinking."""
+        with self._lock:
+            if max_nodes is not _UNSET:
+                self.max_nodes = max_nodes
+            if max_bytes is not _UNSET:
+                self.max_bytes = max_bytes
+            self._evict_locked()
+
+    def _evict_locked(self) -> None:
+        def over() -> bool:
+            if self.max_nodes is not None and len(self._d) > self.max_nodes:
+                return True
+            if self.max_bytes is not None and self._nbytes > self.max_bytes:
+                return True
+            return False
+
+        while self._d and over():
+            _, v = self._d.popitem(last=False)
+            self._nbytes -= self._entry_bytes(v)
+            self.evictions += 1
+
+    def get(self, key):
+        with self._lock:
+            v = self._d.get(key)
+            if v is not None:
+                self._d.move_to_end(key)
+                self.hits += 1
+            else:
+                self.misses += 1
+            return v
+
+    def put(self, key, value) -> None:
+        if self.max_nodes == 0 or self.max_bytes == 0:
+            return
+        with self._lock:
+            old = self._d.pop(key, None)
+            if old is not None:
+                self._nbytes -= self._entry_bytes(old)
+            self._d[key] = value
+            self._nbytes += self._entry_bytes(value)
+            self._evict_locked()
+
+    @property
+    def n_resident(self) -> int:
+        return len(self._d)
+
+    @property
+    def resident_bytes(self) -> int:
+        with self._lock:
+            return self._nbytes
+
+    def namespace_stats(self) -> dict:
+        """Per-namespace (resident nodes, resident bytes) breakdown."""
+        with self._lock:
+            out: dict = {}
+            for key, v in self._d.items():
+                ns = key[0]
+                n, b = out.get(ns, (0, 0))
+                out[ns] = (n + 1, b + self._entry_bytes(v))
+            return out
+
+    def clear(self) -> None:
+        with self._lock:
+            self._d.clear()
+            self._nbytes = 0
+
+
+# ------------------------------------------------------------------ results
+def pack_rows(
+    dists_rows: list, ids_rows: list, k: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Pad per-query result lists to rectangular [B, k] (+inf / -1 pads)."""
+    B = len(dists_rows)
+    d = np.full((B, k), np.inf, np.float32)
+    i = np.full((B, k), -1, np.int64)
+    for r, (dr, ir) in enumerate(zip(dists_rows, ids_rows)):
+        n = min(len(ir), k)
+        if n:
+            d[r, :n] = np.asarray(dr[:n], np.float32)
+            i[r, :n] = np.asarray(ir[:n], np.int64)
+    return d, i
+
+
+@dataclass
+class ResultSet:
+    """One emission of search results.
+
+    ``dists``/``ids`` are ``[k]`` for a single-vector query and ``[B, k]``
+    for a batch; rows with fewer than k hits are padded with ``+inf``/-1.
+    ``stats`` is one ``SearchStats`` (single) or a list (batch); searchers
+    without meaningful counters may leave it None.  ``query`` is the handle
+    owning the incremental state — call ``.next(k)`` on it for more.
+    """
+
+    dists: np.ndarray
+    ids: np.ndarray
+    stats: SearchStats | list | None = None
+    query: "Query | None" = None
+
+    @property
+    def batched(self) -> bool:
+        return self.ids.ndim == 2
+
+    def pairs(self) -> list[tuple[float, int]]:
+        """Valid (dist, id) pairs of a single-query result, pads dropped."""
+        if self.batched:
+            raise ValueError("pairs() is for single-query results; index rows instead")
+        return [(float(d), int(i)) for d, i in zip(self.dists, self.ids) if i >= 0]
+
+    def row_ids(self, r: int) -> list[int]:
+        if not self.batched and r != 0:
+            raise IndexError(f"single-query ResultSet has only row 0, got {r}")
+        ids = self.ids[r] if self.batched else self.ids
+        return [int(i) for i in ids if i >= 0]
+
+    def __len__(self) -> int:
+        if self.batched:
+            return int(self.ids.shape[0])
+        return int((self.ids >= 0).sum())
+
+
+# ------------------------------------------------------------------ queries
+class Query:
+    """Handle owning the incremental state of one ``search`` call."""
+
+    _closed = False
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def _ensure_open(self) -> None:
+        if self._closed:
+            raise QueryClosedError(f"{type(self).__name__} is closed")
+
+    def next(self, k: int) -> ResultSet:
+        raise NotImplementedError
+
+    def save(self, name: str | None = None) -> str:
+        raise NotImplementedError(
+            f"{type(self).__name__} has no persistent form; only file-structure "
+            "(eCP-FS) queries support save()"
+        )
+
+    def close(self) -> None:
+        self._closed = True
+
+
+class RestartQuery(Query):
+    """Continuation for searchers with no native incremental state.
+
+    ``next(k)`` re-runs the underlying search asking for ``emitted + k``
+    results and returns the tail — the paper's restart protocol for
+    IVF / HNSW / DiskANN in the incremental workload (§5, Table 4).
+    """
+
+    def __init__(self, searcher: "Searcher", q: np.ndarray, k: int, *, b=None, opts: dict | None = None):
+        self._searcher = searcher
+        self._q = np.asarray(q)
+        self._b = b
+        self._opts = dict(opts or {})
+        self._emitted = k
+
+    def next(self, k: int) -> ResultSet:
+        self._ensure_open()
+        want = self._emitted + k
+        rs = self._searcher.search(self._q, want, b=self._b, **self._opts)
+        lo = self._emitted
+        self._emitted = want
+        if rs.batched:
+            d, i = rs.dists[:, lo:want], rs.ids[:, lo:want]
+        else:
+            d, i = rs.dists[lo:want], rs.ids[lo:want]
+        # re-pad to exactly k
+        if i.shape[-1] < k:
+            pad = k - i.shape[-1]
+            pd = np.full(i.shape[:-1] + (pad,), np.inf, np.float32)
+            pi = np.full(i.shape[:-1] + (pad,), -1, np.int64)
+            d = np.concatenate([d, pd], axis=-1)
+            i = np.concatenate([i, pi], axis=-1)
+        return ResultSet(dists=d, ids=i, stats=rs.stats, query=self)
+
+
+# ----------------------------------------------------------------- protocol
+@runtime_checkable
+class Searcher(Protocol):
+    """Anything that answers k-NN queries through the unified shape."""
+
+    def search(self, q, k: int = 100, *, b=None, **opts) -> ResultSet:
+        ...
+
+
+# ------------------------------------------------------------------ factory
+def open_index(
+    path,
+    mode: str = "auto",
+    *,
+    cache: NodeCache | None = None,
+    namespace: str | None = None,
+    cache_max_nodes: int | None = None,
+    cache_max_bytes: int | None = None,
+    **kw,
+) -> Searcher:
+    """Open an eCP-FS file structure as a ``Searcher``.
+
+    mode="file"    -> ``ECPIndex``: lazy node loading, LRU cache, true
+                      incremental search (the paper's mode).
+    mode="packed"  -> ``BatchedSearcher``: whole hierarchy packed onto the
+                      device for level-synchronous batched search.
+    mode="auto"    -> "packed" when a non-CPU jax backend is available,
+                      else "file".
+    """
+    wants_cache = (
+        cache is not None
+        or namespace is not None
+        or cache_max_nodes is not None
+        or cache_max_bytes is not None
+    )
+    if mode == "auto":
+        if wants_cache:
+            mode = "file"  # a cache budget is a request for bounded file mode
+        else:
+            import jax
+
+            mode = "packed" if jax.default_backend() != "cpu" else "file"
+    if mode == "file":
+        from .search import ECPIndex
+
+        return ECPIndex(
+            path,
+            cache=cache,
+            namespace=namespace,
+            cache_max_nodes=cache_max_nodes,
+            cache_max_bytes=cache_max_bytes,
+            **kw,
+        )
+    if mode == "packed":
+        if wants_cache:
+            raise ValueError(
+                "packed mode loads the whole hierarchy onto the device; "
+                "cache/namespace/cache_max_* only apply to mode='file'"
+            )
+        from .batched import BatchedSearcher
+        from .fstore import FStore
+        from .packed import load_packed
+
+        store = path if isinstance(path, FStore) else FStore(path)
+        return BatchedSearcher(load_packed(store), **kw)
+    raise ValueError(f"unknown open_index mode: {mode!r} (file|packed|auto)")
+
+
+# ------------------------------------------------------------------ session
+class MultiIndexSession:
+    """N indexes under one shared byte-budget node cache (paper §1, §6.1).
+
+    Every index opened through the session shares a single globally-LRU
+    ``NodeCache`` budgeted in bytes; a node loaded for any index can evict
+    the coldest node of any other.  The budget is runtime-resizable —
+    the paper's "limit changeable at run-time" made fleet-wide.
+
+        sess = MultiIndexSession(cache_bytes=8 << 20)
+        lifelog = sess.open("/idx/lifelog")
+        docs = sess.open("/idx/docs")
+        rs = lifelog.search(q, k=10, b=8)
+        sess.resize(cache_bytes=2 << 20)     # shrink the whole fleet live
+    """
+
+    def __init__(
+        self,
+        *,
+        cache_bytes: int | None = None,
+        cache_nodes: int | None = None,
+    ):
+        self.cache = NodeCache(cache_nodes, max_bytes=cache_bytes)
+        self._indexes: dict[str, Searcher] = {}
+
+    def open(self, path, name: str | None = None, *, mode: str = "file", **kw) -> Searcher:
+        """Open an index under the shared cache and register it by name."""
+        if name is None:
+            name = str(path).rstrip("/").rsplit("/", 1)[-1]
+        if name in self._indexes:
+            raise ValueError(f"index name already open in session: {name!r}")
+        if mode == "file":
+            s = open_index(path, mode="file", cache=self.cache, namespace=name, **kw)
+        else:
+            # packed/auto indexes are device-resident; they do not draw from
+            # the shared node budget but stay addressable via the session.
+            s = open_index(path, mode=mode, **kw)
+        self._indexes[name] = s
+        return s
+
+    def __getitem__(self, name: str) -> Searcher:
+        return self._indexes[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._indexes
+
+    def names(self) -> list[str]:
+        return list(self._indexes)
+
+    def search(self, name: str, q, k: int = 100, *, b=None, **opts) -> ResultSet:
+        return self._indexes[name].search(q, k, b=b, **opts)
+
+    def resize(self, *, cache_bytes=_UNSET, cache_nodes=_UNSET) -> None:
+        self.cache.resize(
+            cache_nodes if cache_nodes is not _UNSET else _UNSET,
+            max_bytes=cache_bytes if cache_bytes is not _UNSET else _UNSET,
+        )
+
+    def stats(self) -> dict:
+        per = self.cache.namespace_stats()
+        return {
+            "indexes": self.names(),
+            "resident_nodes": self.cache.n_resident,
+            "resident_bytes": self.cache.resident_bytes,
+            "budget_bytes": self.cache.max_bytes,
+            "hits": self.cache.hits,
+            "misses": self.cache.misses,
+            "evictions": self.cache.evictions,
+            "per_index": {
+                n: {"nodes": per.get(n, (0, 0))[0], "bytes": per.get(n, (0, 0))[1]}
+                for n in self._indexes
+            },
+        }
+
+    def close(self) -> None:
+        self._indexes.clear()
+        self.cache.clear()

@@ -9,8 +9,13 @@ reason this module exists at all).
   * VamanaLite   — DiskANN's graph: randomized build with alpha-pruning,
                    greedy best-first beam search from a medoid.
 
-All expose: ``search(q, k, ...) -> (dists, ids)`` over float32 numpy data,
-plus ``batch_search``. These back benchmarks/table{2,3,4}_*.py.
+All speak the unified ``Searcher`` API (core/api.py):
+``search(q, k, *, b) -> ResultSet`` over one vector [D] or a batch [B, D],
+where ``b`` is each index's search-effort knob (IVF nprobe, HNSW ef,
+Vamana complexity; BruteForce ignores it).  None of them has native
+incremental state, so the ``ResultSet.query`` handle is a ``RestartQuery``
+that re-searches with ``emitted + k`` — the paper's Table 4 protocol.
+These back benchmarks/table{2,3,4}_*.py.
 """
 from __future__ import annotations
 
@@ -21,9 +26,30 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .api import RestartQuery, ResultSet, pack_rows
 from .distances import jnp_distances, np_distances
 
 __all__ = ["BruteForce", "IVFIndex", "HNSWLite", "VamanaLite", "kmeans"]
+
+
+def _as_result(searcher, q, k, b, rows_d, rows_i, *, single) -> ResultSet:
+    d, i = pack_rows(rows_d, rows_i, k)
+    query = RestartQuery(searcher, q, k, b=b)
+    if single:
+        return ResultSet(dists=d[0], ids=i[0], stats=None, query=query)
+    return ResultSet(dists=d, ids=i, stats=None, query=query)
+
+
+def _effort_search(searcher, q, k, b, default_effort) -> ResultSet:
+    """Shared single/batch dispatch for the effort-knob baselines: resolve
+    ``b`` against the index default, loop rows through ``_search_one``."""
+    eff = int(b) if b is not None else default_effort
+    q = np.asarray(q, np.float32)
+    if q.ndim == 1:
+        d, i = searcher._search_one(q, k, eff)
+        return _as_result(searcher, q, k, b, [d], [i], single=True)
+    rows = [searcher._search_one(row, k, eff) for row in q]
+    return _as_result(searcher, q, k, b, [r[0] for r in rows], [r[1] for r in rows], single=False)
 
 
 # --------------------------------------------------------------- brute force
@@ -32,16 +58,24 @@ class BruteForce:
         self.data = np.asarray(data, np.float32)
         self.metric = metric
 
-    def search(self, q: np.ndarray, k: int):
+    def _search_one(self, q: np.ndarray, k: int):
         d = np_distances(q, self.data, self.metric)
         idx = np.argpartition(d, min(k, len(d) - 1))[:k]
         idx = idx[np.argsort(d[idx])]
         return d[idx], idx
 
-    def batch_search(self, q: np.ndarray, k: int):
+    def search(self, q: np.ndarray, k: int = 100, *, b=None) -> ResultSet:
+        q = np.asarray(q, np.float32)
+        if q.ndim == 1:
+            d, i = self._search_one(q, k)
+            return _as_result(self, q, k, b, [d], [i], single=True)
+        # batch: one dense device distance block, argsorted per row
         d = np.asarray(jnp_distances(jnp.asarray(q), jnp.asarray(self.data), self.metric))
         idx = np.argsort(d, axis=-1)[:, :k]
-        return np.take_along_axis(d, idx, axis=-1), idx
+        return _as_result(
+            self, q, k, b,
+            list(np.take_along_axis(d, idx, axis=-1)), list(idx), single=False,
+        )
 
 
 # ------------------------------------------------------------------- k-means
@@ -95,9 +129,11 @@ class IVFIndex:
         metric: str = "l2",
         train_iters: int = 10,
         seed: int = 0,
+        nprobe: int = 8,
     ):
         self.data = np.asarray(data, np.float32)
         self.metric = metric
+        self.nprobe = nprobe
         self.centroids, assign = kmeans(
             self.data, n_lists, iters=train_iters, metric=metric, seed=seed
         )
@@ -105,7 +141,7 @@ class IVFIndex:
         bounds = np.searchsorted(assign[order], np.arange(n_lists + 1))
         self.lists = [order[bounds[i] : bounds[i + 1]] for i in range(n_lists)]
 
-    def search(self, q: np.ndarray, k: int, *, nprobe: int = 8):
+    def _search_one(self, q: np.ndarray, k: int, nprobe: int):
         cd = np_distances(q, self.centroids, self.metric)
         probe = np.argsort(cd)[:nprobe]
         cand = np.concatenate([self.lists[p] for p in probe]) if len(probe) else np.zeros(0, np.int64)
@@ -116,6 +152,10 @@ class IVFIndex:
         idx = np.argpartition(d, kk - 1)[:kk]
         idx = idx[np.argsort(d[idx])]
         return d[idx], cand[idx]
+
+    def search(self, q: np.ndarray, k: int = 100, *, b=None) -> ResultSet:
+        """b = nprobe (coarse lists visited)."""
+        return _effort_search(self, q, k, b, self.nprobe)
 
 
 # ---------------------------------------------------------------------- HNSW
@@ -135,9 +175,11 @@ class HNSWLite:
         ef_construction: int = 64,
         metric: str = "l2",
         seed: int = 0,
+        ef: int = 100,
     ):
         self.data = np.asarray(data, np.float32)
         self.metric = metric
+        self.ef = ef
         self.M = M
         self.ml = 1.0 / np.log(M)
         rng = np.random.default_rng(seed)
@@ -211,8 +253,7 @@ class HNSWLite:
             self.entry = i
             self.entry_level = lvl
 
-    def search(self, q: np.ndarray, k: int, *, ef: int = 100):
-        q = np.asarray(q, np.float32)
+    def _search_one(self, q: np.ndarray, k: int, ef: int):
         ep = self.entry
         for lc in range(self.max_level, 0, -1):
             if self.graph[lc] and ep in self.graph[lc]:
@@ -222,6 +263,10 @@ class HNSWLite:
             np.asarray([d for d, _ in res], np.float32),
             np.asarray([v for _, v in res], np.int64),
         )
+
+    def search(self, q: np.ndarray, k: int = 100, *, b=None) -> ResultSet:
+        """b = ef (beam width at layer 0)."""
+        return _effort_search(self, q, k, b, self.ef)
 
 
 # -------------------------------------------------------------------- Vamana
@@ -239,9 +284,11 @@ class VamanaLite:
         alpha: float = 1.2,
         metric: str = "l2",
         seed: int = 0,
+        complexity: int = 100,
     ):
         self.data = np.asarray(data, np.float32)
         self.metric = metric
+        self.complexity = complexity
         self.R = R
         n = len(self.data)
         rng = np.random.default_rng(seed)
@@ -302,10 +349,14 @@ class VamanaLite:
             return best, list(visited)
         return best
 
-    def search(self, q: np.ndarray, k: int, *, complexity: int = 100):
-        best = self._greedy(np.asarray(q, np.float32), max(complexity, k))
+    def _search_one(self, q: np.ndarray, k: int, complexity: int):
+        best = self._greedy(q, max(complexity, k))
         best = best[:k]
         return (
             np.asarray([d for d, _ in best], np.float32),
             np.asarray([v for _, v in best], np.int64),
         )
+
+    def search(self, q: np.ndarray, k: int = 100, *, b=None) -> ResultSet:
+        """b = complexity (DiskANN's beam width)."""
+        return _effort_search(self, q, k, b, self.complexity)

@@ -14,8 +14,10 @@ blocks and ``lax.top_k`` selections:
      sorted candidate buffer per query.
 
 ``BatchedQueryState`` is a pytree: (leaf ranking, visit pointer, candidate
-buffer). ``next_k`` emits the best ``k`` unseen items and advances the
-state — the batched equivalent of Algorithm 2. Exhausting the ranked leaf
+buffer).  It is owned by a ``BatchedQuery`` handle: ``search`` returns a
+``ResultSet`` whose ``.query.next(k)`` emits the best ``k`` unseen items
+and advances the state — the batched equivalent of Algorithm 2 behind the
+same unified API as the file-mode searcher.  Exhausting the ranked leaf
 list mirrors the paper's T-queue running empty.
 """
 from __future__ import annotations
@@ -27,10 +29,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .api import Query, ResultSet, SearchStats
 from .distances import jnp_distances
 from .packed import PackedIndex
 
-__all__ = ["BatchedQueryState", "BatchedSearcher"]
+__all__ = ["BatchedQuery", "BatchedQueryState", "BatchedSearcher"]
 
 _INF = jnp.float32(jnp.inf)
 
@@ -58,8 +61,35 @@ def _ascending_top_k(d, ids, k):
     return -neg, jnp.take_along_axis(ids, idx, axis=-1)
 
 
+class BatchedQuery(Query):
+    """Handle over the device-resident state of one batched search call."""
+
+    def __init__(self, searcher: "BatchedSearcher", q: jnp.ndarray, state: BatchedQueryState, *, b: int, single: bool):
+        self._searcher = searcher
+        self._q = q
+        self._state = state
+        self._b = b
+        self._single = single
+
+    @property
+    def state(self) -> BatchedQueryState:
+        self._ensure_open()
+        return self._state
+
+    def next(self, k: int) -> ResultSet:
+        self._ensure_open()
+        d, i, self._state = self._searcher._advance(self._q, self._state, k, self._b)
+        return self._searcher._result(d, i, self._state, self._single, self)
+
+    def close(self) -> None:
+        self._q = None
+        self._state = None
+        super().close()
+
+
 class BatchedSearcher:
-    """Device-resident packed index + jitted search stages."""
+    """Device-resident packed index + jitted search stages (the ``Searcher``
+    for packed mode)."""
 
     def __init__(self, packed: PackedIndex, *, scorer=None):
         self.info = packed.info
@@ -159,15 +189,19 @@ class BatchedSearcher:
     # ---------------------------------------------------------------- API
     def search(
         self,
-        q: jnp.ndarray,
+        q,
         k: int = 100,
         *,
-        b: int = 8,
+        b: int | None = 8,
         b_internal: int | None = None,
         buffer_cap: int | None = None,
-    ):
-        """New batched search. Returns (dists [B,k], ids [B,k], state)."""
+    ) -> ResultSet:
+        """New batched search over [D] or [B, D] queries -> ``ResultSet``."""
+        b = 8 if b is None else int(b)
         q = jnp.asarray(q, jnp.float32)
+        single = q.ndim == 1
+        if single:
+            q = q[None, :]
         B = q.shape[0]
         bi = b_internal if b_internal is not None else max(b, 8)
         leaf_rank, leaf_rank_d = self.rank_leaves(q, bi)
@@ -180,11 +214,11 @@ class BatchedSearcher:
             buf_i=jnp.full((B, C), -1, jnp.int32),
         )
         state = self._scan_chunk(q, state, min(b, leaf_rank.shape[1]))
-        return self.next_k(q, state, k, b=b)
+        d, i, state = self._advance(q, state, k, b)
+        return self._result(d, i, state, single, BatchedQuery(self, q, state, b=b, single=single))
 
-    def next_k(self, q: jnp.ndarray, state: BatchedQueryState, k: int, *, b: int = 8):
+    def _advance(self, q: jnp.ndarray, state: BatchedQueryState, k: int, b: int):
         """Emit the next k items, scanning further leaves if needed."""
-        q = jnp.asarray(q, jnp.float32)
         R = state.leaf_rank.shape[1]
         # scan until every query has k buffered candidates or leaves exhaust
         for _ in range(64):  # hard bound; python loop keeps jit graphs small
@@ -194,3 +228,16 @@ class BatchedSearcher:
                 break
             state = self._scan_chunk(q, state, min(b, R))
         return self._emit(state, k)
+
+    def _result(self, d, i, state: BatchedQueryState, single: bool, query) -> ResultSet:
+        d = np.asarray(d, np.float32)
+        i = np.asarray(i, np.int64)
+        # leaves actually scanned per query (ranked positions visited)
+        ptr = np.asarray(state.next_ptr)
+        stats = [SearchStats(leaves_opened=int(p)) for p in ptr]
+        if single:
+            return ResultSet(dists=d[0], ids=i[0], stats=stats[0], query=query)
+        return ResultSet(dists=d, ids=i, stats=stats, query=query)
+
+    def __repr__(self) -> str:  # handy in session listings
+        return f"BatchedSearcher(levels={self.info.levels}, metric={self.metric!r})"

@@ -1,18 +1,22 @@
 """eCP-FS retrieval: lazy node loading, LRU cache, incremental search.
 
-Faithful implementation of the paper's Algorithms 1-3:
-  * ``NewSearch``       — create a query state (Q, T, I), run one increment,
-                          return the first k items plus a query id.
-  * ``GetNextKItems``   — pop k items from I, resuming the tree search via
-                          ``IncrementalSearch`` when I underflows.
-  * ``IncrementalSearch`` — single cross-level priority queue T: always open
-                          the globally most promising node regardless of
-                          level; leaves append scanned items to I; after b
-                          leaves, either return (|I| >= k) or double b
-                          (bounded by mx_inc) and continue.
+Faithful implementation of the paper's Algorithms 1-3 behind the unified
+``Searcher`` API (core/api.py):
+
+  * ``ECPIndex.search(q, k, *, b)``  — Algorithm 1 (NewSearch): create the
+    per-query state (Q, T, I), run one increment, return the first k items
+    in a ``ResultSet`` whose ``.query`` handle owns the state.
+  * ``ECPQuery.next(k)``             — Algorithm 2 (GetNextKItems): pop k
+    items from I, resuming the tree search when I underflows.
+  * ``_incremental_search``          — Algorithm 3: single cross-level
+    priority queue T: always open the globally most promising node
+    regardless of level; leaves append scanned items to I; after b leaves,
+    either return (|I| >= k) or double b (bounded by mx_inc) and continue.
 
 Node data is loaded on first access and kept in a bounded LRU cache
-(paper §4.2); prefetching up to a level runs on background threads.
+(paper §4.2) which may be private or shared across indexes
+(``MultiIndexSession``); prefetching up to a level runs on background
+threads.
 
 Two deliberate fixes of apparent pseudocode typos (semantics follow the
 paper's prose): (1) Algorithm 2 line 4 checks ``cnt = 0`` but the text says
@@ -25,86 +29,17 @@ from __future__ import annotations
 
 import heapq
 import itertools
-import threading
-from collections import OrderedDict
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 
 import numpy as np
 
 from . import layout
+from .api import NodeCache, Query, ResultSet, SearchStats, pack_rows
 from .distances import np_distances
 from .fstore import FStore
 
-__all__ = ["NodeCache", "ECPIndex", "QueryState", "SearchStats"]
-
-
-class NodeCache:
-    """LRU cache over (level, node) -> (embeddings f32, ids).
-
-    ``max_nodes``: None = unbounded; 0 = caching off (free after use);
-    n > 0 = keep at most n nodes resident. Tunable at runtime (paper §4.2).
-    """
-
-    def __init__(self, max_nodes: int | None = None):
-        self.max_nodes = max_nodes
-        self._d: OrderedDict[tuple[int, int], tuple[np.ndarray, np.ndarray]] = OrderedDict()
-        self._lock = threading.Lock()
-        self.hits = 0
-        self.misses = 0
-        self.evictions = 0
-
-    def resize(self, max_nodes: int | None) -> None:
-        with self._lock:
-            self.max_nodes = max_nodes
-            self._evict_locked()
-
-    def _evict_locked(self) -> None:
-        if self.max_nodes is None:
-            return
-        while len(self._d) > self.max_nodes:
-            self._d.popitem(last=False)
-            self.evictions += 1
-
-    def get(self, key):
-        with self._lock:
-            v = self._d.get(key)
-            if v is not None:
-                self._d.move_to_end(key)
-                self.hits += 1
-            else:
-                self.misses += 1
-            return v
-
-    def put(self, key, value) -> None:
-        if self.max_nodes == 0:
-            return
-        with self._lock:
-            self._d[key] = value
-            self._d.move_to_end(key)
-            self._evict_locked()
-
-    @property
-    def n_resident(self) -> int:
-        return len(self._d)
-
-    @property
-    def resident_bytes(self) -> int:
-        with self._lock:
-            return sum(e.nbytes + i.nbytes for e, i in self._d.values())
-
-    def clear(self) -> None:
-        with self._lock:
-            self._d.clear()
-
-
-@dataclass
-class SearchStats:
-    node_loads: int = 0            # disk reads (cache misses served from files)
-    nodes_opened: int = 0          # total nodes popped from T
-    leaves_opened: int = 0
-    distance_calcs: int = 0        # individual distance computations
-    increments: int = 0            # b-doublings
+__all__ = ["ECPIndex", "ECPQuery", "QueryState", "NodeCache", "SearchStats"]
 
 
 @dataclass
@@ -124,14 +59,114 @@ class QueryState:
     _tie: "itertools.count" = field(default_factory=itertools.count)
 
 
+class ECPQuery(Query):
+    """Handle over one ``ECPIndex.search`` call (single query or a batch).
+
+    Owns one ``QueryState`` per query row; ``next(k)`` resumes the
+    incremental search, ``save()`` persists the frontier into the index's
+    own file structure (paper §6.2), ``close()`` frees the states — any
+    later call raises ``QueryClosedError`` (no silent ``None`` holes).
+    """
+
+    def __init__(self, index: "ECPIndex", states: list[QueryState], *, single: bool):
+        self._index = index
+        self._states = states
+        self._single = single
+
+    # ------------------------------------------------------------- access
+    @property
+    def states(self) -> list[QueryState]:
+        self._ensure_open()
+        return self._states
+
+    @property
+    def state(self) -> QueryState:
+        """The sole state of a single-query handle."""
+        self._ensure_open()
+        if len(self._states) != 1:
+            raise ValueError("state is for single-query handles; use states")
+        return self._states[0]
+
+    @property
+    def stats(self):
+        self._ensure_open()
+        if self._single:
+            return self._states[0].stats
+        return [s.stats for s in self._states]
+
+    @property
+    def b(self):
+        self._ensure_open()
+        if self._single:
+            return self._states[0].b
+        return [s.b for s in self._states]
+
+    # -------------------------------------------------------- continuation
+    def next(self, k: int) -> ResultSet:
+        self._ensure_open()
+        rows = [self._index._next_items(qs, k) for qs in self._states]
+        return self._index._result(rows, self._states, k, self._single, self)
+
+    # -------------------------------------------------------- persistence
+    def save(self, name: str | None = None, *, group: str = "query_states") -> str:
+        """Persist all row states; returns the token ``load_query`` takes."""
+        self._ensure_open()
+        store = self._index.store
+        if name is None:
+            existing = set(store.listdir(group)) if store.exists(group) else set()
+            n = 0
+            while f"q_{n:06d}" in existing:
+                n += 1
+            name = f"q_{n:06d}"
+        g = f"{group}/{name}"
+        store.create_group(g, attrs={"n_rows": len(self._states), "single": self._single})
+        for r, qs in enumerate(self._states):
+            rg = f"{g}/row_{r:06d}"
+            store.create_group(rg)
+            store.write_array(f"{rg}/query", qs.q)
+            if qs.I:
+                d = np.asarray([x[0] for x in qs.I], np.float32)
+                i = np.asarray([x[1] for x in qs.I], np.int64)
+            else:
+                d = np.zeros((0,), np.float32)
+                i = np.zeros((0,), np.int64)
+            store.write_array(f"{rg}/item_dists", d)
+            store.write_array(f"{rg}/item_ids", i)
+            if qs.T:
+                t = np.asarray([(e[0], e[2], e[3], e[4]) for e in qs.T], np.float64)
+            else:
+                t = np.zeros((0, 4), np.float64)
+            store.write_array(f"{rg}/frontier", t)
+            store.write_attrs(
+                rg,
+                {
+                    "b": qs.b,
+                    "mx_inc": qs.mx_inc,
+                    "increments": qs.increments,
+                    "emitted": qs.emitted,
+                    "started": qs.started,
+                    "exclude": sorted(int(x) for x in qs.exclude),
+                },
+            )
+        return name
+
+    def close(self) -> None:
+        self._states = []
+        super().close()
+
+
 class ECPIndex:
-    """Open an eCP-FS file structure for retrieval."""
+    """Open an eCP-FS file structure for retrieval (the ``Searcher`` for
+    file mode: bounded memory, true incremental continuation)."""
 
     def __init__(
         self,
         path: str | FStore,
         *,
+        cache: NodeCache | None = None,
+        namespace: str | None = None,
         cache_max_nodes: int | None = None,
+        cache_max_bytes: int | None = None,
         prefetch_workers: int = 4,
     ):
         self.store = path if isinstance(path, FStore) else FStore(path)
@@ -139,14 +174,17 @@ class ECPIndex:
         # Loading the index = read info + index_root only (paper §4.2).
         self.root_emb = self.store.read_array(f"{layout.ROOT}/{layout.EMB}").astype(np.float32)
         self.root_ids = self.store.read_array(f"{layout.ROOT}/{layout.IDS}")
-        self.cache = NodeCache(cache_max_nodes)
-        self.QS: list[QueryState] = []
+        self.cache = cache if cache is not None else NodeCache(
+            cache_max_nodes, max_bytes=cache_max_bytes
+        )
+        # namespace tag keeps keys distinct inside a shared session cache
+        self._ns = namespace if namespace is not None else str(self.store.root)
         self._prefetch_workers = prefetch_workers
         self.load_node_count = 0
 
     # ------------------------------------------------------------ node IO
     def get_node(self, level: int, node: int) -> tuple[np.ndarray, np.ndarray]:
-        key = (level, node)
+        key = (self._ns, level, node)
         v = self.cache.get(key)
         if v is not None:
             return v
@@ -173,40 +211,57 @@ class ECPIndex:
             list(ex.map(lambda k: self.get_node(*k), keys))
 
     # ------------------------------------------------------- Algorithm 1
-    def new_search(
+    def search(
         self,
         q: np.ndarray,
         k: int = 100,
         *,
-        b: int = 8,
+        b: int | None = 8,
         mx_inc: int = 4,
         exclude: set | None = None,
-    ) -> tuple[list[tuple[float, int]], int]:
-        qs = QueryState(
-            q=np.asarray(q, np.float32),
-            b=b,
-            mx_inc=mx_inc,
-            exclude=set(exclude) if exclude else set(),
-        )
-        self.QS.append(qs)
-        q_id = len(self.QS) - 1
-        self._incremental_search(q_id, k)
-        return self.get_next_k(q_id, k), q_id
+    ) -> ResultSet:
+        """New search over one vector [D] or a batch [B, D].
+
+        Returns a ``ResultSet``; ``.query`` is the ``ECPQuery`` handle for
+        ``next(k)`` continuation, ``save()``, and ``close()``.
+        """
+        b = 8 if b is None else int(b)
+        q = np.asarray(q, np.float32)
+        single = q.ndim == 1
+        Q = q[None, :] if single else q
+        states = [
+            QueryState(
+                q=row,
+                b=b,
+                mx_inc=mx_inc,
+                exclude=set(exclude) if exclude else set(),
+            )
+            for row in Q
+        ]
+        rows = []
+        for qs in states:
+            self._incremental_search(qs, k)
+            rows.append(self._next_items(qs, k))
+        return self._result(rows, states, k, single, ECPQuery(self, states, single=single))
+
+    def _result(self, rows, states, k, single, query) -> ResultSet:
+        d, i = pack_rows([[x[0] for x in r] for r in rows], [[x[1] for x in r] for r in rows], k)
+        if single:
+            return ResultSet(dists=d[0], ids=i[0], stats=states[0].stats, query=query)
+        return ResultSet(dists=d, ids=i, stats=[s.stats for s in states], query=query)
 
     # ------------------------------------------------------- Algorithm 2
-    def get_next_k(self, q_id: int, k: int) -> list[tuple[float, int]]:
-        qs = self.QS[q_id]
+    def _next_items(self, qs: QueryState, k: int) -> list[tuple[float, int]]:
         cnt = min(len(qs.I), k)
         if cnt < k and qs.T:
-            self._incremental_search(q_id, k)
+            self._incremental_search(qs, k)
             cnt = min(len(qs.I), k)
         out, qs.I = qs.I[:cnt], qs.I[cnt:]
         qs.emitted += len(out)
         return out
 
     # ------------------------------------------------------- Algorithm 3
-    def _incremental_search(self, q_id: int, k: int) -> None:
-        qs = self.QS[q_id]
+    def _incremental_search(self, qs: QueryState, k: int) -> None:
         info = self.info
         metric = info.metric
         leaf_cnt = 0
@@ -253,62 +308,33 @@ class ECPIndex:
         qs.stats.node_loads += self.load_node_count - loads_before
         qs.I.sort(key=lambda t: t[0])
 
-    # ------------------------------------------------------------- misc
-    def drop_query(self, q_id: int) -> None:
-        self.QS[q_id] = None  # type: ignore[assignment]
-
-    def save_query_state(self, q_id: int, group: str = "query_states") -> None:
-        """Persist a query state into the same file structure (paper §6.2)."""
-        qs = self.QS[q_id]
-        g = f"{group}/q_{q_id:06d}"
-        self.store.create_group(g)
-        self.store.write_array(f"{g}/query", qs.q)
-        if qs.I:
-            d = np.asarray([x[0] for x in qs.I], np.float32)
-            i = np.asarray([x[1] for x in qs.I], np.int64)
-        else:
-            d = np.zeros((0,), np.float32)
-            i = np.zeros((0,), np.int64)
-        self.store.write_array(f"{g}/item_dists", d)
-        self.store.write_array(f"{g}/item_ids", i)
-        if qs.T:
-            t = np.asarray(
-                [(e[0], e[2], e[3], e[4]) for e in qs.T], np.float64
+    # -------------------------------------------------------- persistence
+    def load_query(self, name: str, *, group: str = "query_states") -> ECPQuery:
+        """Rehydrate a saved ``ECPQuery`` (token from ``ECPQuery.save``)."""
+        g = f"{group}/{name}"
+        head = self.store.read_attrs(g)
+        n_rows = int(head.get("n_rows", 1))
+        single = bool(head.get("single", n_rows == 1))
+        states = []
+        for r in range(n_rows):
+            rg = f"{g}/row_{r:06d}"
+            a = self.store.read_attrs(rg)
+            qs = QueryState(
+                q=self.store.read_array(f"{rg}/query"),
+                b=int(a["b"]),
+                mx_inc=int(a["mx_inc"]),
+                exclude=set(a.get("exclude", [])),
             )
-        else:
-            t = np.zeros((0, 4), np.float64)
-        self.store.write_array(f"{g}/frontier", t)
-        self.store.write_attrs(
-            g,
-            {
-                "b": qs.b,
-                "mx_inc": qs.mx_inc,
-                "increments": qs.increments,
-                "emitted": qs.emitted,
-                "started": qs.started,
-                "exclude": sorted(int(x) for x in qs.exclude),
-            },
-        )
-
-    def load_query_state(self, q_id: int, group: str = "query_states") -> int:
-        g = f"{group}/q_{q_id:06d}"
-        a = self.store.read_attrs(g)
-        qs = QueryState(
-            q=self.store.read_array(f"{g}/query"),
-            b=int(a["b"]),
-            mx_inc=int(a["mx_inc"]),
-            exclude=set(a.get("exclude", [])),
-        )
-        qs.increments = int(a["increments"])
-        qs.emitted = int(a["emitted"])
-        qs.started = bool(a["started"])
-        d = self.store.read_array(f"{g}/item_dists")
-        i = self.store.read_array(f"{g}/item_ids")
-        qs.I = [(float(x), int(y)) for x, y in zip(d, i)]
-        t = self.store.read_array(f"{g}/frontier")
-        for row in t:
-            heapq.heappush(
-                qs.T, (float(row[0]), next(qs._tie), int(row[1]), int(row[2]), int(row[3]))
-            )
-        self.QS.append(qs)
-        return len(self.QS) - 1
+            qs.increments = int(a["increments"])
+            qs.emitted = int(a["emitted"])
+            qs.started = bool(a["started"])
+            d = self.store.read_array(f"{rg}/item_dists")
+            i = self.store.read_array(f"{rg}/item_ids")
+            qs.I = [(float(x), int(y)) for x, y in zip(d, i)]
+            t = self.store.read_array(f"{rg}/frontier")
+            for row in t:
+                heapq.heappush(
+                    qs.T, (float(row[0]), next(qs._tie), int(row[1]), int(row[2]), int(row[3]))
+                )
+            states.append(qs)
+        return ECPQuery(self, states, single=single)

@@ -1,10 +1,13 @@
 """ANN serving driver — the paper's own application as a service loop.
 
-Two serving modes over one eCP-FS index:
-  * interactive  — host-driven incremental search (Algorithms 1-3): per-query
-    state, get-next-k continuation, LRU-bounded memory. The paper's mode.
-  * batched      — device-side level-synchronous beam search
-    (core/batched.py): request batching with a fixed tick, the TPU mode.
+One ``Server`` class over ANY ``Searcher`` (core/api.py): the serving
+logic no longer cares whether requests hit the host-driven file structure
+(``open_index(path, mode="file")`` — per-query state, get-next-k
+continuation, LRU-bounded memory: the paper's mode) or the device-side
+level-synchronous beam search (``mode="packed"`` — request batching, the
+TPU mode).  Continuations are tracked as ``Query`` handles behind integer
+session ids; closing a session frees its state and later use raises
+``QueryClosedError`` — not a silent crash.
 
   PYTHONPATH=src python -m repro.launch.serve --demo
 """
@@ -17,11 +20,12 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core import (
-    BatchedSearcher,
     ECPBuildConfig,
-    ECPIndex,
+    QueryClosedError,
+    ResultSet,
+    Searcher,
     build_index,
-    load_packed,
+    open_index,
 )
 from repro.data import clustered_vectors
 
@@ -43,55 +47,52 @@ class ServeStats:
         }
 
 
-class InteractiveServer:
-    """The paper's serving mode: query states + incremental retrieval."""
+class Server:
+    """Serving loop over any unified-API searcher.
 
-    def __init__(self, index_path: str, *, cache_max_nodes: int | None = None):
-        self.index = ECPIndex(index_path, cache_max_nodes=cache_max_nodes)
+    ``search`` answers one vector or a whole request batch and returns
+    ``(ResultSet, session_id)``; ``more`` resumes a session via its Query
+    handle; ``close`` drops it.  Works identically for file-mode eCP-FS,
+    the packed device searcher, and any baseline.
+    """
+
+    def __init__(self, searcher: Searcher):
+        self.searcher = searcher
         self.stats = ServeStats()
-
-    def search(self, q, k=100, b=8):
-        t0 = time.perf_counter()
-        res, qid = self.index.new_search(np.asarray(q, np.float32), k, b=b)
-        self.stats.queries += 1
-        self.stats.latencies_ms.append((time.perf_counter() - t0) * 1e3)
-        return res, qid
-
-    def more(self, qid, k=100):
-        t0 = time.perf_counter()
-        res = self.index.get_next_k(qid, k)
-        self.stats.continuations += 1
-        self.stats.latencies_ms.append((time.perf_counter() - t0) * 1e3)
-        return res
-
-
-class BatchedServer:
-    """TPU mode: collect requests, run one device beam-search per tick."""
-
-    def __init__(self, index_path: str):
-        self.searcher = BatchedSearcher(load_packed(ECPIndex(index_path).store))
-        self.stats = ServeStats()
-        self._sessions: dict[int, tuple] = {}
+        self._sessions: dict[int, object] = {}
         self._next_sid = 0
 
-    def search_batch(self, Q, k=100, b=8):
+    def search(self, q, k: int = 100, *, b=None, **opts) -> tuple[ResultSet, int]:
         t0 = time.perf_counter()
-        d, i, state = self.searcher.search(np.asarray(Q, np.float32), k, b=b)
+        rs = self.searcher.search(np.asarray(q, np.float32), k, b=b, **opts)
         sid = self._next_sid
         self._next_sid += 1
-        self._sessions[sid] = (np.asarray(Q, np.float32), state)
-        self.stats.queries += Q.shape[0]
+        self._sessions[sid] = rs.query
+        self.stats.queries += 1 if rs.ids.ndim == 1 else rs.ids.shape[0]
         self.stats.latencies_ms.append((time.perf_counter() - t0) * 1e3)
-        return np.asarray(d), np.asarray(i), sid
+        return rs, sid
 
-    def more_batch(self, sid, k=100, b=8):
+    def _session(self, sid: int):
+        q = self._sessions.get(sid)
+        if q is None:
+            raise QueryClosedError(f"unknown or closed session: {sid}")
+        return q
+
+    def more(self, sid: int, k: int = 100) -> ResultSet:
         t0 = time.perf_counter()
-        Q, state = self._sessions[sid]
-        d, i, state = self.searcher.next_k(Q, state, k, b=b)
-        self._sessions[sid] = (Q, state)
-        self.stats.continuations += Q.shape[0]
+        rs = self._session(sid).next(k)
+        self.stats.continuations += 1 if rs.ids.ndim == 1 else rs.ids.shape[0]
         self.stats.latencies_ms.append((time.perf_counter() - t0) * 1e3)
-        return np.asarray(d), np.asarray(i)
+        return rs
+
+    def close(self, sid: int) -> None:
+        q = self._session(sid)
+        del self._sessions[sid]
+        q.close()
+
+    @property
+    def open_sessions(self) -> int:
+        return len(self._sessions)
 
 
 def demo() -> None:
@@ -102,19 +103,23 @@ def demo() -> None:
         path = td + "/idx"
         print("building index ...")
         build_index(data, path, ECPBuildConfig(levels=2, cluster_cap=200, metric="l2"))
-        srv = InteractiveServer(path, cache_max_nodes=64)
         rng = np.random.default_rng(1)
         qs = data[rng.integers(0, len(data), 32)] + 0.01 * rng.normal(size=(32, 128)).astype(np.float32)
-        sessions = []
-        for q in qs:
-            res, qid = srv.search(q, k=20, b=8)
-            sessions.append(qid)
-        for qid in sessions[:8]:
-            srv.more(qid, k=20)
+
+        # interactive: the paper's mode — one request at a time, bounded RAM
+        srv = Server(open_index(path, mode="file", cache_max_nodes=64))
+        sids = [srv.search(q, k=20, b=8)[1] for q in qs]
+        for sid in sids[:8]:
+            srv.more(sid, k=20)
+        for sid in sids:
+            srv.close(sid)
         print("interactive:", srv.stats.summary())
-        bsrv = BatchedServer(path)
-        d, i, sid = bsrv.search_batch(qs, k=20, b=8)
-        bsrv.more_batch(sid, k=20)
+
+        # batched: same Server, device searcher, whole batch per tick
+        bsrv = Server(open_index(path, mode="packed"))
+        rs, sid = bsrv.search(qs, k=20, b=8)
+        bsrv.more(sid, k=20)
+        bsrv.close(sid)
         print("batched:    ", bsrv.stats.summary())
 
 
@@ -125,4 +130,4 @@ if __name__ == "__main__":
     if args.demo:
         demo()
     else:
-        print("use --demo (library mode: import InteractiveServer/BatchedServer)")
+        print("use --demo (library mode: import Server + repro.core.open_index)")

@@ -15,6 +15,8 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
+from repro.launch import mesh as mesh_compat
+
 __all__ = ["MoEConfig", "moe_ffn", "moe_ffn_ep"]
 
 
@@ -79,7 +81,7 @@ def moe_ffn_ep(x, router_w, w_gate, w_up, w_down, cfg: MoEConfig, *, model_axis:
     """
     from jax.sharding import PartitionSpec as _P
 
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = mesh_compat.get_abstract_mesh()
     sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
     n_m = sizes[model_axis]
     E = cfg.n_experts
@@ -116,7 +118,7 @@ def moe_ffn_ep(x, router_w, w_gate, w_up, w_down, cfg: MoEConfig, *, model_axis:
         out = out * gate[:, None].astype(y.dtype)
         return jax.lax.psum(out, model_axis)               # one owner per token
 
-    out = jax.shard_map(
+    out = mesh_compat.shard_map(
         local,
         mesh=mesh,
         in_specs=(

@@ -1,0 +1,180 @@
+"""Unified Searcher API: query-handle lifecycle, persistence roundtrip,
+file-vs-batched parity, and the shared byte-budget MultiIndexSession."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    ECPBuildConfig,
+    ECPIndex,
+    MultiIndexSession,
+    NodeCache,
+    QueryClosedError,
+    ResultSet,
+    Searcher,
+    build_index,
+    open_index,
+)
+from repro.data import clustered_vectors
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    data, _ = clustered_vectors(3, n=6000, dim=32, n_clusters=48)
+    path = tmp_path_factory.mktemp("api_idx") / "ecp"
+    build_index(data, str(path), ECPBuildConfig(levels=2, metric="l2", cluster_cap=64, seed=0))
+    return data, str(path)
+
+
+# ------------------------------------------------------------ protocol shape
+def test_every_searcher_speaks_the_protocol(built):
+    data, path = built
+    from repro.core.baselines import BruteForce, IVFIndex
+
+    for s in (
+        open_index(path, mode="file"),
+        open_index(path, mode="packed"),
+        BruteForce(data),
+        IVFIndex(data, n_lists=16, train_iters=3),
+    ):
+        assert isinstance(s, Searcher)
+        rs = s.search(data[5], k=4, b=8)
+        assert isinstance(rs, ResultSet)
+        assert rs.ids.shape == (4,) and rs.dists.shape == (4,)
+        assert rs.query is not None
+        rs2 = s.search(data[:3], k=4, b=8)
+        assert rs2.ids.shape == (3, 4)
+
+
+def test_open_index_auto_and_bad_mode(built):
+    _, path = built
+    s = open_index(path, mode="auto")  # cpu test env -> file mode
+    assert isinstance(s, ECPIndex)
+    with pytest.raises(ValueError):
+        open_index(path, mode="nope")
+
+
+# ------------------------------------------------------- handle lifecycle
+def test_query_lifecycle_next_close_closed_error(built):
+    data, path = built
+    idx = open_index(path, mode="file")
+    rs = idx.search(data[10], k=8, b=4)
+    first = set(rs.row_ids(0))
+    more = rs.query.next(8)
+    assert not (first & set(more.row_ids(0))), "next() re-emitted items"
+    rs.query.close()
+    assert rs.query.closed
+    with pytest.raises(QueryClosedError):
+        rs.query.next(8)
+    with pytest.raises(QueryClosedError):
+        rs.query.save()
+    # closing twice is fine; state is gone, not a None hole
+    rs.query.close()
+
+
+def test_batched_query_lifecycle(built):
+    data, path = built
+    bs = open_index(path, mode="packed")
+    rs = bs.search(data[:4], k=5, b=16)
+    more = rs.query.next(5)
+    for r in range(4):
+        assert not (set(rs.row_ids(r)) & set(more.row_ids(r)))
+    rs.query.close()
+    with pytest.raises(QueryClosedError):
+        rs.query.next(5)
+
+
+# ---------------------------------------------------------- persistence
+def test_save_load_roundtrip_preserves_frontier(built):
+    data, path = built
+    idx = open_index(path, mode="file")
+    rs = idx.search(data[21], k=10, b=4)
+    rs.query.next(10)                      # advance the frontier a bit
+    token = rs.query.save(name="roundtrip")
+    fresh = open_index(path, mode="file")  # completely fresh instance
+    resumed = fresh.load_query(token)
+    a = rs.query.next(10).pairs()
+    b = resumed.next(10).pairs()
+    assert [i for _, i in a] == [i for _, i in b]
+    # loaded state carries the same b/emitted bookkeeping
+    assert resumed.state.b == rs.query.state.b
+    assert resumed.state.emitted == rs.query.state.emitted
+
+
+def test_save_batch_roundtrip(built):
+    data, path = built
+    idx = open_index(path, mode="file")
+    rs = idx.search(data[:3], k=6, b=4)
+    token = rs.query.save()
+    resumed = open_index(path, mode="file").load_query(token)
+    a = rs.query.next(6)
+    b = resumed.next(6)
+    np.testing.assert_array_equal(a.ids, b.ids)
+
+
+# --------------------------------------------------------------- parity
+def test_file_vs_batched_parity(built):
+    """Same dataset, same queries: file mode and packed mode agree on k-NN."""
+    data, path = built
+    idx = open_index(path, mode="file")
+    bs = open_index(path, mode="packed")
+    rng = np.random.default_rng(11)
+    Q = data[rng.integers(0, len(data), 6)]
+    w = idx.info.nodes_per_level[0]
+    rsb = bs.search(Q, k=5, b=64, b_internal=w)
+    for r in range(len(Q)):
+        host = idx.search(Q[r], k=5, b=64)
+        assert host.row_ids(0) == list(rsb.ids[r]), f"row {r}"
+
+
+# ------------------------------------------------------- shared cache
+def test_node_cache_byte_budget():
+    c = NodeCache(max_bytes=10_000)
+    for j in range(20):
+        c.put(("ns", 1, j), (np.zeros((10, 32), np.float32), np.zeros((10,), np.int64)))
+    assert c.resident_bytes <= 10_000
+    assert c.evictions > 0
+    c.resize(max_bytes=2_000)
+    assert c.resident_bytes <= 2_000
+    c.resize(max_bytes=0)
+
+
+def test_multi_index_session_respects_shared_budget(built, tmp_path_factory):
+    data, path = built
+    data2, _ = clustered_vectors(9, n=6000, dim=32, n_clusters=48)
+    path2 = str(tmp_path_factory.mktemp("api_idx2") / "ecp2")
+    build_index(data2, path2, ECPBuildConfig(levels=2, metric="l2", cluster_cap=64, seed=1))
+
+    budget = 200_000
+    sess = MultiIndexSession(cache_bytes=budget)
+    a = sess.open(path, name="a")
+    b = sess.open(path2, name="b")
+    assert a.cache is sess.cache and b.cache is sess.cache
+    rng = np.random.default_rng(4)
+    for t in range(12):
+        ra = a.search(data[rng.integers(0, len(data))], k=5, b=8)
+        rb = b.search(data2[rng.integers(0, len(data2))], k=5, b=8)
+        assert len(ra.row_ids(0)) == 5 and len(rb.row_ids(0)) == 5
+        assert sess.cache.resident_bytes <= budget
+    st = sess.stats()
+    assert st["evictions"] > 0, "budget never forced an eviction"
+    assert set(st["per_index"]) == {"a", "b"}
+    assert st["resident_bytes"] <= budget
+
+    # fleet-wide live resize (paper §4.2 knob)
+    sess.resize(cache_bytes=budget // 4)
+    assert sess.cache.resident_bytes <= budget // 4
+    # both indexes still answer correctly under the tighter budget
+    assert a.search(data[42], k=1, b=8).ids[0] == 42
+    assert b.search(data2[7], k=1, b=8).ids[0] == 7
+    sess.close()
+    assert sess.cache.n_resident == 0
+
+
+def test_session_name_collision_and_lookup(built):
+    _, path = built
+    sess = MultiIndexSession(cache_bytes=1 << 20)
+    sess.open(path, name="x")
+    assert "x" in sess and sess.names() == ["x"]
+    assert sess["x"] is sess._indexes["x"]
+    with pytest.raises(ValueError):
+        sess.open(path, name="x")

@@ -1,7 +1,9 @@
-"""Baseline indexes (IVF / HNSW-lite / Vamana-lite) sanity vs brute force."""
+"""Baseline indexes (IVF / HNSW-lite / Vamana-lite) sanity vs brute force,
+through the unified Searcher API."""
 import numpy as np
 import pytest
 
+from repro.core import QueryClosedError
 from repro.core.baselines import BruteForce, HNSWLite, IVFIndex, VamanaLite, kmeans
 from repro.data import clustered_vectors
 
@@ -12,15 +14,15 @@ def dataset():
     bf = BruteForce(data)
     rng = np.random.default_rng(2)
     qs = data[rng.integers(0, len(data), 15)] + 0.005 * rng.normal(size=(15, 24)).astype(np.float32)
-    gt = [set(bf.search(q, 10)[1].tolist()) for q in qs]
+    gt = [set(bf.search(q, 10).row_ids(0)) for q in qs]
     return data, qs, gt
 
 
-def _recall(idx_search, qs, gt, **kw):
+def _recall(searcher, qs, gt, *, b=None):
     rec = []
     for q, g in zip(qs, gt):
-        _, ids = idx_search(q, 10, **kw)
-        rec.append(len(g & set(np.asarray(ids).tolist())) / 10)
+        ids = searcher.search(q, 10, b=b).row_ids(0)
+        rec.append(len(g & set(ids)) / 10)
     return float(np.mean(rec))
 
 
@@ -36,25 +38,41 @@ def test_kmeans_partitions(dataset):
 def test_ivf_recall(dataset):
     data, qs, gt = dataset
     ivf = IVFIndex(data, n_lists=32, train_iters=5)
-    assert _recall(ivf.search, qs, gt, nprobe=8) >= 0.8
+    assert _recall(ivf, qs, gt, b=8) >= 0.8
 
 
 def test_hnsw_recall(dataset):
     data, qs, gt = dataset
     h = HNSWLite(data, M=12, ef_construction=48)
-    assert _recall(h.search, qs, gt, ef=64) >= 0.8
+    assert _recall(h, qs, gt, b=64) >= 0.8
 
 
 def test_vamana_recall(dataset):
     data, qs, gt = dataset
     v = VamanaLite(data, R=16, L_build=48)
-    assert _recall(v.search, qs, gt, complexity=64) >= 0.8
+    assert _recall(v, qs, gt, b=64) >= 0.8
 
 
 def test_bruteforce_batch_matches_single(dataset):
     data, qs, _ = dataset
     bf = BruteForce(data)
-    d_b, i_b = bf.batch_search(qs[:4], 5)
+    rs_b = bf.search(qs[:4], 5)
+    assert rs_b.ids.shape == (4, 5)
     for r in range(4):
-        d_s, i_s = bf.search(qs[r], 5)
-        np.testing.assert_array_equal(i_b[r], i_s)
+        rs_s = bf.search(qs[r], 5)
+        np.testing.assert_array_equal(rs_b.ids[r], rs_s.ids)
+
+
+def test_restart_query_matches_tail(dataset):
+    """Baseline continuation == the tail of one bigger search (Table 4)."""
+    data, qs, _ = dataset
+    ivf = IVFIndex(data, n_lists=32, train_iters=5)
+    rs = ivf.search(qs[0], 10, b=8)
+    more = rs.query.next(10)
+    big = ivf.search(qs[0], 20, b=8)
+    np.testing.assert_array_equal(
+        np.concatenate([rs.ids, more.ids]), big.ids
+    )
+    rs.query.close()
+    with pytest.raises(QueryClosedError):
+        rs.query.next(5)

@@ -1,14 +1,14 @@
-"""eCP index: build invariants, cost model, incremental search semantics."""
+"""eCP index: build invariants, cost model, incremental search semantics —
+all through the unified Searcher/ResultSet/Query API."""
 import numpy as np
 import pytest
 
 from repro.core import (
     ECPBuildConfig,
-    ECPIndex,
-    BatchedSearcher,
     build_index,
     derive_shape,
     load_packed,
+    open_index,
 )
 from repro.core import layout
 from repro.core.baselines import BruteForce
@@ -66,20 +66,21 @@ def test_internal_children_partition_leaders(built):
 
 def test_search_exact_hit(built):
     data, path, _ = built
-    idx = ECPIndex(path)
-    res, qid = idx.new_search(data[42], k=5, b=8)
-    assert res[0][1] == 42
-    assert res[0][0] < 1e-2
+    idx = open_index(path, mode="file")
+    rs = idx.search(data[42], k=5, b=8)
+    assert rs.ids[0] == 42
+    assert rs.dists[0] < 1e-2
 
 
 def test_incremental_no_duplicates_and_sorted(built):
     data, path, _ = built
-    idx = ECPIndex(path)
-    res, qid = idx.new_search(data[7], k=50, b=4)
-    all_items = [i for _, i in res]
-    all_d = [d for d, _ in res]
+    idx = open_index(path, mode="file")
+    rs = idx.search(data[7], k=50, b=4)
+    pairs = rs.pairs()
+    all_items = [i for _, i in pairs]
+    all_d = [d for d, _ in pairs]
     for _ in range(5):
-        more = idx.get_next_k(qid, 50)
+        more = rs.query.next(50).pairs()
         if not more:
             break
         all_items.extend(i for _, i in more)
@@ -91,107 +92,105 @@ def test_incremental_no_duplicates_and_sorted(built):
 
 
 def test_incremental_matches_single_big_search(built):
-    """get_next_k continuation == one big search (same b schedule)."""
+    """Query.next continuation == one big search (same b schedule)."""
     data, path, _ = built
     q = data[3] + 0.01
-    idx1 = ECPIndex(path)
-    res1, qid = idx1.new_search(q, k=30, b=64, mx_inc=0)
-    idx2 = ECPIndex(path)
-    res2, qid2 = idx2.new_search(q, k=10, b=64, mx_inc=0)
-    stream = list(res2)
+    rs1 = open_index(path, mode="file").search(q, k=30, b=64, mx_inc=0)
+    rs2 = open_index(path, mode="file").search(q, k=10, b=64, mx_inc=0)
+    stream = list(rs2.pairs())
     while len(stream) < 30:
-        nxt = idx2.get_next_k(qid2, 10)
+        nxt = rs2.query.next(10).pairs()
         if not nxt:
             break
         stream.extend(nxt)
-    assert [i for _, i in res1] == [i for _, i in stream[:30]]
+    assert [i for _, i in rs1.pairs()] == [i for _, i in stream[:30]]
 
 
 def test_recall_reasonable_on_clustered_data(built):
     data, path, _ = built
-    idx = ECPIndex(path)
+    idx = open_index(path, mode="file")
     bf = BruteForce(data, "l2")
     rng = np.random.default_rng(5)
     qs = data[rng.integers(0, len(data), 20)] + 0.01 * rng.normal(size=(20, 32)).astype(np.float32)
     recalls = []
     for q in qs:
-        res, _ = idx.new_search(q, k=10, b=16)
-        gt = set(bf.search(q, 10)[1].tolist())
-        recalls.append(len(gt & {i for _, i in res}) / 10)
+        got = set(idx.search(q, k=10, b=16).row_ids(0))
+        gt = set(bf.search(q, 10).row_ids(0))
+        recalls.append(len(gt & got) / 10)
     assert np.mean(recalls) >= 0.6, f"recall {np.mean(recalls)}"
 
 
 def test_filter_exclude_triggers_expansion(built):
     """Paper §4.3 'Internal' case: filters shrink results; b doubles."""
     data, path, _ = built
-    idx = ECPIndex(path)
-    res0, _ = idx.new_search(data[9], k=20, b=2, mx_inc=0)
-    exclude = {i for _, i in res0}
-    res, qid = idx.new_search(data[9], k=20, b=2, mx_inc=4, exclude=exclude)
-    got = {i for _, i in res}
+    idx = open_index(path, mode="file")
+    rs0 = idx.search(data[9], k=20, b=2, mx_inc=0)
+    exclude = set(rs0.row_ids(0))
+    rs = idx.search(data[9], k=20, b=2, mx_inc=4, exclude=exclude)
+    got = set(rs.row_ids(0))
     assert not (got & exclude)
-    assert idx.QS[qid].increments > 0 or len(res) == 20
+    assert rs.query.stats.increments > 0 or len(rs) == 20
 
 
 def test_lru_cache_bound(built):
     data, path, _ = built
-    idx = ECPIndex(path, cache_max_nodes=4)
+    idx = open_index(path, mode="file", cache_max_nodes=4)
     for i in range(10):
-        idx.new_search(data[i * 100], k=10, b=8)
+        idx.search(data[i * 100], k=10, b=8)
     assert idx.cache.n_resident <= 4
     assert idx.cache.evictions > 0
 
 
 def test_cache_off_frees_everything(built):
     data, path, _ = built
-    idx = ECPIndex(path, cache_max_nodes=0)
-    idx.new_search(data[0], k=10, b=4)
+    idx = open_index(path, mode="file", cache_max_nodes=0)
+    idx.search(data[0], k=10, b=4)
     assert idx.cache.n_resident == 0
 
 
 def test_prefetch_warms_cache(built):
     data, path, _ = built
-    idx = ECPIndex(path)
+    idx = open_index(path, mode="file")
     idx.prefetch(up_to_level=1)
     assert idx.cache.n_resident == idx.info.nodes_per_level[0]
     loads_before = idx.load_node_count
-    idx.new_search(data[1], k=5, b=2)
+    rs = idx.search(data[1], k=5, b=2)
     # level-1 nodes already resident: only leaf loads remain
-    assert idx.load_node_count - loads_before <= idx.QS[0].stats.leaves_opened + 2
+    assert idx.load_node_count - loads_before <= rs.query.stats.leaves_opened + 2
 
 
 def test_query_state_persistence(built):
     data, path, _ = built
-    idx = ECPIndex(path)
-    res, qid = idx.new_search(data[11], k=10, b=4)
-    idx.save_query_state(qid)
-    idx2 = ECPIndex(path)
-    qid2 = idx2.load_query_state(qid)
-    more2 = idx2.get_next_k(qid2, 10)
-    more1 = idx.get_next_k(qid, 10)
-    assert [i for _, i in more1] == [i for _, i in more2]
+    idx = open_index(path, mode="file")
+    rs = idx.search(data[11], k=10, b=4)
+    token = rs.query.save()
+    idx2 = open_index(path, mode="file")
+    q2 = idx2.load_query(token)
+    more2 = q2.next(10)
+    more1 = rs.query.next(10)
+    assert [i for _, i in more1.pairs()] == [i for _, i in more2.pairs()]
 
 
 def test_batched_matches_host_on_first_k(built):
     data, path, store = built
     packed = load_packed(store)
-    bs = BatchedSearcher(packed)
+    bs = open_index(path, mode="packed")
     rng = np.random.default_rng(3)
     Q = data[rng.integers(0, len(data), 8)]
-    d, i, st = bs.search(Q, k=5, b=64, b_internal=packed.info.nodes_per_level[0])
-    idx = ECPIndex(path)
+    rsb = bs.search(Q, k=5, b=64, b_internal=packed.info.nodes_per_level[0])
+    idx = open_index(path, mode="file")
     for r in range(8):
-        host, _ = idx.new_search(Q[r], k=5, b=64)
-        assert [x for _, x in host] == list(np.asarray(i)[r]), f"row {r}"
+        host = idx.search(Q[r], k=5, b=64)
+        assert host.row_ids(0) == list(rsb.ids[r]), f"row {r}"
 
 
 def test_distance_calc_cost_model(built):
     """Expanded-search cost (paper §3): w + (L-1)*b*w + b*cap, within 2x."""
     data, path, _ = built
-    idx = ECPIndex(path)
+    idx = open_index(path, mode="file")
     b = 4
-    res, qid = idx.new_search(data[77], k=5, b=b, mx_inc=0)
-    st = idx.QS[qid].stats
+    rs = idx.search(data[77], k=5, b=b, mx_inc=0)
+    st = rs.query.stats
     info = idx.info
     w = info.nodes_per_level[0]
     cap = info.cluster_cap
