@@ -1,0 +1,157 @@
+"""Storage-backend comparison — the paper's file-vs-serialized question
+made a measurable axis (core/store.py).
+
+Same index, same queries, same byte-budgeted node cache (the paper's
+memory-constrained setting, §6.1): each row is one backend —
+
+  * fstore         the human-readable zarr-v2 hierarchy (JSON + chunk
+                   files; several file opens per node read)
+  * blob           the page-aligned single-file form (one pread per node,
+                   adjacent nodes coalesce)
+  * blob+prefetch  blob wrapped in AsyncPrefetchStore (frontier children
+                   load on background threads during traversal)
+
+Reported per backend: load time, cold/warm latency, and the ``IOStats``
+counters (bytes read / files opened / reads issued) accumulated by the
+store during the cold pass, plus the cache-resident bytes under the
+budget.
+
+Also usable as a CI smoke check::
+
+  PYTHONPATH=src python -m benchmarks.backends --smoke
+
+builds a tiny index, converts fstore -> blob, and asserts bit-identical
+search results across all three backends.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def compare(
+    *,
+    ecp_path: str,
+    blob_path: str,
+    queries: np.ndarray,
+    k: int = 100,
+    b: int = 16,
+    cache_bytes: int = 1 << 20,
+    backends=("fstore", "blob", "blob+prefetch"),
+    runs: int = 2,
+) -> list[dict]:
+    """One row per backend: latency + IOStats under a byte-budgeted cache."""
+    from repro.core import open_index
+
+    rows = []
+    for backend in backends:
+        path = ecp_path if backend == "fstore" else blob_path
+        t0 = time.perf_counter()
+        idx = open_index(path, mode="file", backend=backend, cache_max_bytes=cache_bytes)
+        load_s = time.perf_counter() - t0
+
+        drain = getattr(idx.store, "drain", None)  # flush async prefetch I/O
+        io0 = idx.store.io.snapshot()
+        cold, warm = [], []
+        for r in range(runs):
+            for q in queries:
+                t0 = time.perf_counter()
+                idx.search(q, k, b=b)
+                (cold if r == 0 else warm).append(time.perf_counter() - t0)
+            if r == 0:
+                if drain is not None:
+                    drain()
+                cold_io = idx.store.io.delta(io0)
+        rows.append(
+            {
+                "backend": backend,
+                "load_s": round(load_s, 4),
+                "lat_cold_s": round(float(np.mean(cold)), 6),
+                "lat_warm_s": round(float(np.mean(warm)), 6) if warm else 0.0,
+                "bytes_read": cold_io.bytes_read,
+                "files_opened": cold_io.files_opened,
+                "reads_issued": cold_io.reads_issued,
+                "cache_bytes": idx.cache.resident_bytes,
+                "budget_bytes": cache_bytes,
+            }
+        )
+    return rows
+
+
+def run(backends=("fstore", "blob", "blob+prefetch"), *, runs: int = 2) -> list[dict]:
+    """The run.py scenario: compare backends over the shared bench suite
+    under a tight shared cache budget (memory-constrained setting)."""
+    from .indexes import get_suite
+
+    s = get_suite()
+    queries = np.stack([t.queries[-1] for t in s.ds.tasks])
+    # budget ~ a handful of leaf clusters: forces evictions like §6.1
+    dim = s.ds.data.shape[1]
+    cache_bytes = 32 * s.params["k"] * dim * 4
+    return compare(
+        ecp_path=s.ecp_path,
+        blob_path=s.ecp_blob_path,
+        queries=queries,
+        k=s.params["k"],
+        b=s.params["b"]["eCP-FS"],
+        cache_bytes=cache_bytes,
+        backends=backends,
+        runs=runs,
+    )
+
+
+def smoke(n: int = 2000, dim: int = 16, n_queries: int = 16) -> None:
+    """Tiny end-to-end parity check: build -> convert -> bit-identical
+    results on fstore, blob, and blob+prefetch; blob must issue fewer
+    reads than fstore.  Raises on any violation."""
+    import tempfile
+
+    from repro.core import ECPBuildConfig, build_index, convert, open_index
+    from repro.data import clustered_vectors
+
+    data, _ = clustered_vectors(0, n=n, dim=dim, n_clusters=24)
+    with tempfile.TemporaryDirectory() as td:
+        path = td + "/idx"
+        build_index(data, path, ECPBuildConfig(levels=2, cluster_cap=64))
+        blob = str(convert(path, td + "/idx.blob"))
+
+        rng = np.random.default_rng(7)
+        qs = data[rng.integers(0, n, n_queries)]
+        fidx = open_index(path, mode="file", backend="fstore")
+        bidx = open_index(blob, mode="file", backend="blob")
+        pidx = open_index(blob, mode="file", backend="blob", prefetch=True)
+        f_io0 = fidx.store.io.snapshot()
+        b_io0 = bidx.store.io.snapshot()
+        for q in qs:
+            rf = fidx.search(q, k=10, b=8)
+            rb = bidx.search(q, k=10, b=8)
+            rp = pidx.search(q, k=10, b=8)
+            np.testing.assert_array_equal(rf.ids, rb.ids)
+            np.testing.assert_array_equal(rf.dists, rb.dists)
+            np.testing.assert_array_equal(rf.ids, rp.ids)
+            np.testing.assert_array_equal(rf.dists, rp.dists)
+        f_io = fidx.store.io.delta(f_io0)
+        b_io = bidx.store.io.delta(b_io0)
+        assert b_io.reads_issued < f_io.reads_issued, (
+            f"blob should issue fewer reads: blob={b_io} fstore={f_io}"
+        )
+        print(
+            f"backend smoke OK: {n_queries} queries bit-identical; "
+            f"fstore reads={f_io.reads_issued} files={f_io.files_opened} "
+            f"bytes={f_io.bytes_read} | blob reads={b_io.reads_issued} "
+            f"bytes={b_io.bytes_read}"
+        )
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="tiny build/convert/parity check")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+    else:
+        for row in run():
+            print(row)

@@ -14,16 +14,20 @@ import time
 from dataclasses import dataclass
 from pathlib import Path
 
-from repro.core import ECPBuildConfig, ECPIndex, build_index, open_index
+from repro.core import ECPBuildConfig, ECPIndex, build_index, convert, open_index
 from repro.core.baselines import BruteForce, HNSWLite, IVFIndex, VamanaLite
 
 from .mmir import MMIRDataset, make_dataset
+
+# storage-backend axis for the eCP index (core/store.py)
+BACKENDS = ("fstore", "blob", "blob+prefetch")
 
 
 @dataclass
 class BenchSuite:
     ds: MMIRDataset
     ecp_path: str
+    ecp_blob_path: str
     ecp_build_s: float
     ivf: IVFIndex
     ivf_build_s: float
@@ -34,9 +38,13 @@ class BenchSuite:
     bf: BruteForce
     params: dict
 
-    def fresh_ecp(self, **kw) -> ECPIndex:
-        """A cold file-mode searcher (empty node cache — 'disk' runs)."""
-        return open_index(self.ecp_path, mode="file", **kw)
+    def fresh_ecp(self, backend: str = "fstore", **kw) -> ECPIndex:
+        """A cold file-mode searcher (empty node cache — 'disk' runs) over
+        the chosen storage backend: fstore | blob | blob+prefetch."""
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown eCP backend: {backend!r} ({'|'.join(BACKENDS)})")
+        path = self.ecp_path if backend == "fstore" else self.ecp_blob_path
+        return open_index(path, mode="file", backend=backend, **kw)
 
     def searchers(self) -> dict:
         """name -> (Searcher, effort b) for every index in the suite."""
@@ -66,6 +74,7 @@ def get_suite(*, n_items=20000, dim=32, n_tasks=40, seed=0, workdir=None) -> Ben
         ECPBuildConfig(levels=2, metric="l2", cluster_cap=max(64, n_items // 256)),
     )
     ecp_build = time.time() - t0
+    ecp_blob_path = str(convert(ecp_path, workdir / "ecp_index.blob"))
 
     n_lists = max(32, n_items // 256)
     t0 = time.time()
@@ -81,7 +90,7 @@ def get_suite(*, n_items=20000, dim=32, n_tasks=40, seed=0, workdir=None) -> Ben
     vamana_build = time.time() - t0
 
     _SUITE = BenchSuite(
-        ds=ds, ecp_path=ecp_path, ecp_build_s=ecp_build,
+        ds=ds, ecp_path=ecp_path, ecp_blob_path=ecp_blob_path, ecp_build_s=ecp_build,
         ivf=ivf, ivf_build_s=ivf_build, hnsw=hnsw, hnsw_build_s=hnsw_build,
         vamana=vamana, vamana_build_s=vamana_build, bf=BruteForce(ds.data),
         params={

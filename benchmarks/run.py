@@ -29,9 +29,17 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", help="smaller dataset / fewer runs")
     ap.add_argument("--n-items", type=int, default=None)
+    ap.add_argument(
+        "--backend",
+        choices=("fstore", "blob", "blob+prefetch", "all"),
+        default="fstore",
+        help="eCP-FS node-storage backend for tables 2/4; the backend-"
+        "comparison section always reports every backend ('all' repeats "
+        "tables 2/4 per backend)",
+    )
     args = ap.parse_args()
 
-    from . import indexes, roofline, table2_single_query, table3_tasks, table4_incremental
+    from . import backends, indexes, roofline, table2_single_query, table3_tasks, table4_incremental
 
     n_items = args.n_items or (6000 if args.fast else 20000)
     runs = 2 if args.fast else 4
@@ -44,14 +52,29 @@ def main() -> None:
         f"(total {time.time()-t0:.1f}s)"
     )
 
-    t2 = table2_single_query.run(runs=runs)
+    ecp_backends = list(indexes.BACKENDS) if args.backend == "all" else [args.backend]
+
+    t2 = []
+    for i, be in enumerate(ecp_backends):
+        t2.extend(table2_single_query.run(runs=runs, backend=be, baselines=i == 0))
     _print_table("Table 2 — load time + single-query latency (disk/memory) + workload", t2)
 
     t3 = table3_tasks.run()
     _print_table("Table 3 — tasks completed (target in top-100) + recall@100", t3)
 
-    t4 = table4_incremental.run(rounds=10, runs=max(2, runs // 2))
+    t4 = []
+    for i, be in enumerate(ecp_backends):
+        t4.extend(
+            table4_incremental.run(rounds=10, runs=max(2, runs // 2), backend=be, baselines=i == 0)
+        )
     _print_table("Table 4 — incremental workload: top-100 then 10 x '100 more'", t4)
+
+    tb = backends.run(runs=runs)
+    _print_table(
+        "Backend comparison — same queries, byte-budgeted cache "
+        "(cold-pass IOStats: the file-vs-serialized axis)",
+        tb,
+    )
 
     print("\n=== Roofline (single-pod 16x16, from dry-run artifacts) ===")
     roofline.print_table("single")
@@ -64,11 +87,17 @@ def main() -> None:
         print(f"table2/{r['index']}/mem,{r['lat_mem_s']*1e6:.1f},disk_us={r['lat_disk_s']*1e6:.1f}")
     for r in t3:
         print(f"table3/{r['index']},0,tasks={r['tasks']};recall={r['recall@100']}")
-    ecp_wl = next(r for r in t4 if r["index"] == "eCP-FS")["workload_s"]
+    ecp_wl = next(r for r in t4 if r["index"].startswith("eCP-FS"))["workload_s"]
     for r in t4:
         sp = r["workload_s"] / ecp_wl if ecp_wl else 0.0
         print(
             f"table4/{r['index']},{r['lat_mem_s']*1e6:.1f},workload_s={r['workload_s']};vs_ecp={sp:.1f}x"
+        )
+    for r in tb:
+        print(
+            f"backend/{r['backend']},{r['lat_cold_s']*1e6:.1f},"
+            f"warm_us={r['lat_warm_s']*1e6:.1f};bytes={r['bytes_read']};"
+            f"files={r['files_opened']};reads={r['reads_issued']}"
         )
     sys.stdout.flush()
 

@@ -12,26 +12,29 @@ from .indexes import get_suite
 from .mmir import single_query_workload
 
 
-def run(runs: int = 4) -> list[dict]:
+def run(runs: int = 4, backend: str = "fstore", *, baselines: bool = True) -> list[dict]:
     s = get_suite()
     p = s.params
     k = p["k"]
     rows = []
 
-    # --- eCP-FS: fresh instance => lazy, node-loading "disk" first run
+    # --- eCP-FS: fresh instance => lazy, node-loading "disk" first run;
+    #     ``backend`` picks its node storage (fstore | blob | blob+prefetch)
     t0 = time.perf_counter()
-    ecp = s.fresh_ecp()
+    ecp = s.fresh_ecp(backend)
     load_s = time.perf_counter() - t0
 
     r = single_query_workload(
-        s.ds, "eCP-FS", ecp, k=k, b=p["b"]["eCP-FS"], runs=runs,
-        load_s=load_s, reset_fn=s.fresh_ecp,
+        s.ds, f"eCP-FS[{backend}]", ecp, k=k, b=p["b"]["eCP-FS"], runs=runs,
+        load_s=load_s, reset_fn=lambda: s.fresh_ecp(backend),
     )
     row = r.row()
     row["build_s"] = round(s.ecp_build_s, 2)
     rows.append(row)
 
-    # --- in-memory baselines
+    # --- in-memory baselines (skippable when sweeping eCP backends)
+    if not baselines:
+        return rows
     for name, searcher, build_s in (
         ("IVF", s.ivf, s.ivf_build_s),
         ("HNSW", s.hnsw, s.hnsw_build_s),

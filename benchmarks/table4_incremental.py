@@ -13,23 +13,28 @@ from .indexes import get_suite
 from .mmir import incremental_workload
 
 
-def run(rounds: int = 10, runs: int = 2) -> list[dict]:
+def run(
+    rounds: int = 10, runs: int = 2, backend: str = "fstore", *, baselines: bool = True
+) -> list[dict]:
     s = get_suite()
     p = s.params
     k = p["k"]
     rows = []
 
-    # --- eCP-FS: native continuation via its query handle
+    # --- eCP-FS: native continuation via its query handle, over the chosen
+    #     storage backend (fstore | blob | blob+prefetch)
     t0 = time.perf_counter()
-    ecp = s.fresh_ecp()
+    ecp = s.fresh_ecp(backend)
     load_s = time.perf_counter() - t0
     r = incremental_workload(
-        s.ds, "eCP-FS", ecp, k=k, b=p["b"]["eCP-FS"],
+        s.ds, f"eCP-FS[{backend}]", ecp, k=k, b=p["b"]["eCP-FS"],
         rounds=rounds, runs=runs, load_s=load_s,
     )
     rows.append(r.row())
 
     # --- baselines: RestartQuery re-searches with k + k*round internally
+    if not baselines:
+        return rows
     for name, searcher in (("IVF", s.ivf), ("HNSW", s.hnsw), ("DiskANN-lite", s.vamana)):
         rr = incremental_workload(
             s.ds, name, searcher, k=k, b=p["b"][name], rounds=rounds, runs=runs

@@ -12,7 +12,13 @@ Public API (everything speaks core/api.py's unified shape):
   ECPIndex / ECPQuery              — file-structure retrieval with LRU cache
                                      and incremental search (search.py)
   BatchedSearcher / BatchedQuery   — TPU-native batched beam search (batched.py)
-  FStore                           — the transparent zarr-v2 file store
+  Store / open_store               — pluggable node storage (store.py):
+                                     FStoreBackend (zarr-v2 hierarchy),
+                                     BlobStore (page-aligned single file,
+                                     built with convert()), and
+                                     AsyncPrefetchStore (threaded prefetch);
+                                     IOStats counts bytes/files/reads
+  FStore                           — the raw transparent zarr-v2 file layer
   load_packed / PackedIndex        — dense device view of the hierarchy
   baselines                        — BruteForce / IVF / HNSWLite / VamanaLite
 """
@@ -33,6 +39,15 @@ from .fstore import FStore
 from .layout import IndexInfo, derive_shape
 from .packed import PackedIndex, load_packed
 from .search import ECPIndex, ECPQuery, QueryState
+from .store import (
+    AsyncPrefetchStore,
+    BlobStore,
+    FStoreBackend,
+    IOStats,
+    Store,
+    convert,
+    open_store,
+)
 
 __all__ = [
     "Searcher",
@@ -41,9 +56,16 @@ __all__ = [
     "QueryClosedError",
     "RestartQuery",
     "SearchStats",
+    "IOStats",
     "NodeCache",
     "open_index",
     "MultiIndexSession",
+    "Store",
+    "open_store",
+    "convert",
+    "FStoreBackend",
+    "BlobStore",
+    "AsyncPrefetchStore",
     "ECPBuildConfig",
     "build_index",
     "BatchedQuery",

@@ -45,8 +45,11 @@ from typing import Protocol, runtime_checkable
 
 import numpy as np
 
+from .store import IOStats, open_store
+
 __all__ = [
     "SearchStats",
+    "IOStats",
     "NodeCache",
     "ResultSet",
     "Query",
@@ -66,11 +69,12 @@ class QueryClosedError(RuntimeError):
 
 @dataclass
 class SearchStats:
-    node_loads: int = 0            # disk reads (cache misses served from files)
+    node_loads: int = 0            # disk reads (cache misses served from the store)
     nodes_opened: int = 0          # total nodes popped from T
     leaves_opened: int = 0
     distance_calcs: int = 0        # individual distance computations
     increments: int = 0            # b-doublings
+    io: IOStats = field(default_factory=IOStats)  # bytes/files/reads at the store
 
 
 # --------------------------------------------------------------------- cache
@@ -89,9 +93,16 @@ class NodeCache:
     without collisions; eviction is globally LRU across all of them.
     """
 
+    @staticmethod
+    def _norm_budget(v):
+        """None = unbounded; any budget <= 0 means caching off."""
+        if v is None:
+            return None
+        return max(0, int(v))
+
     def __init__(self, max_nodes: int | None = None, *, max_bytes: int | None = None):
-        self.max_nodes = max_nodes
-        self.max_bytes = max_bytes
+        self.max_nodes = self._norm_budget(max_nodes)
+        self.max_bytes = self._norm_budget(max_bytes)
         self._d: OrderedDict[tuple, tuple[np.ndarray, np.ndarray]] = OrderedDict()
         self._nbytes = 0
         self._lock = threading.Lock()
@@ -108,9 +119,9 @@ class NodeCache:
         """Change either budget live; evicts immediately if shrinking."""
         with self._lock:
             if max_nodes is not _UNSET:
-                self.max_nodes = max_nodes
+                self.max_nodes = self._norm_budget(max_nodes)
             if max_bytes is not _UNSET:
-                self.max_bytes = max_bytes
+                self.max_bytes = self._norm_budget(max_bytes)
             self._evict_locked()
 
     def _evict_locked(self) -> None:
@@ -125,6 +136,12 @@ class NodeCache:
             _, v = self._d.popitem(last=False)
             self._nbytes -= self._entry_bytes(v)
             self.evictions += 1
+
+    def contains(self, key) -> bool:
+        """Membership probe that does NOT touch LRU order or hit/miss stats
+        (used by prefetch heuristics to skip already-resident nodes)."""
+        with self._lock:
+            return key in self._d
 
     def get(self, key):
         with self._lock:
@@ -302,13 +319,15 @@ def open_index(
     path,
     mode: str = "auto",
     *,
+    backend: str = "auto",
+    prefetch: bool = False,
     cache: NodeCache | None = None,
     namespace: str | None = None,
     cache_max_nodes: int | None = None,
     cache_max_bytes: int | None = None,
     **kw,
 ) -> Searcher:
-    """Open an eCP-FS file structure as a ``Searcher``.
+    """Open an eCP index as a ``Searcher``.
 
     mode="file"    -> ``ECPIndex``: lazy node loading, LRU cache, true
                       incremental search (the paper's mode).
@@ -316,6 +335,12 @@ def open_index(
                       device for level-synchronous batched search.
     mode="auto"    -> "packed" when a non-CPU jax backend is available,
                       else "file".
+
+    ``backend`` picks the node storage under either mode (core/store.py):
+    "fstore" (the zarr-v2 hierarchy), "blob" (page-aligned single file),
+    or "auto" (blob when ``path`` is/contains a blob, else fstore).
+    ``prefetch=True`` wraps the store with async frontier prefetching
+    (file mode only).
     """
     wants_cache = (
         cache is not None
@@ -323,9 +348,10 @@ def open_index(
         or cache_max_nodes is not None
         or cache_max_bytes is not None
     )
+    wants_prefetch = prefetch or backend.endswith("+prefetch")
     if mode == "auto":
-        if wants_cache:
-            mode = "file"  # a cache budget is a request for bounded file mode
+        if wants_cache or wants_prefetch:
+            mode = "file"  # cache budgets / prefetch are file-mode requests
         else:
             import jax
 
@@ -335,6 +361,8 @@ def open_index(
 
         return ECPIndex(
             path,
+            backend=backend,
+            prefetch=prefetch,
             cache=cache,
             namespace=namespace,
             cache_max_nodes=cache_max_nodes,
@@ -342,17 +370,15 @@ def open_index(
             **kw,
         )
     if mode == "packed":
-        if wants_cache:
+        if wants_cache or wants_prefetch:
             raise ValueError(
                 "packed mode loads the whole hierarchy onto the device; "
-                "cache/namespace/cache_max_* only apply to mode='file'"
+                "cache/namespace/cache_max_*/prefetch only apply to mode='file'"
             )
         from .batched import BatchedSearcher
-        from .fstore import FStore
         from .packed import load_packed
 
-        store = path if isinstance(path, FStore) else FStore(path)
-        return BatchedSearcher(load_packed(store), **kw)
+        return BatchedSearcher(load_packed(open_store(path, backend=backend)), **kw)
     raise ValueError(f"unknown open_index mode: {mode!r} (file|packed|auto)")
 
 

@@ -24,8 +24,8 @@ import numpy as np
 
 from . import layout
 from .distances import jnp_distances
-from .fstore import FStore
 from .packed import PackedLevel, pack_children
+from .store import FStoreBackend, open_store
 
 __all__ = ["ECPBuildConfig", "build_index"]
 
@@ -84,8 +84,13 @@ def build_index(
     cfg: ECPBuildConfig = ECPBuildConfig(),
     *,
     item_ids: np.ndarray | None = None,
-) -> FStore:
-    """Build an eCP-FS index over ``data`` [N, D] at directory ``path``."""
+) -> FStoreBackend:
+    """Build an eCP-FS index over ``data`` [N, D] at directory ``path``.
+
+    The index is always built into the writable file-structure backend
+    (the paper's human-readable form); serialize it afterwards with
+    ``repro.core.store.convert(path, blob_path)`` for the blob backend.
+    """
     data = np.asarray(data)
     n_items, dim = data.shape
     if item_ids is None:
@@ -128,7 +133,7 @@ def build_index(
         leaf_of[lo:hi] = np.asarray(insert(q))
 
     # --- write the file structure -----------------------------------------
-    store = FStore(path, create=True)
+    store = open_store(path, backend="fstore", create=True)
     info = layout.IndexInfo(
         levels=L,
         metric=cfg.metric,
@@ -144,10 +149,9 @@ def build_index(
     store.create_group(layout.INFO, attrs=info.to_attrs())
     store.write_array(layout.REP_EMB, leaders.astype(store_dt), chunk_rows=4096)
     store.write_array(layout.REP_IDS, leader_idx.astype(np.int64), chunk_rows=65536)
-    store.create_group(layout.ROOT)
-    store.write_array(f"{layout.ROOT}/{layout.EMB}", root_emb.astype(store_dt))
-    store.write_array(
-        f"{layout.ROOT}/{layout.IDS}", np.arange(len(root_emb), dtype=np.int32)
+    # the root is node (0, 0) of the Store protocol
+    store.write_node(
+        0, 0, root_emb.astype(store_dt), np.arange(len(root_emb), dtype=np.int32)
     )
 
     # internal levels: lvl_1 .. lvl_{L-1}
@@ -155,10 +159,7 @@ def build_index(
         lv = i + 1
         store.create_group(layout.lvl_group(lv))
         for j, ids in enumerate(lists):
-            g = layout.node_group(lv, j)
-            store.create_group(g)
-            store.write_array(f"{g}/{layout.EMB}", leaders[ids].astype(store_dt))
-            store.write_array(f"{g}/{layout.IDS}", ids.astype(np.int32))
+            store.write_node(lv, j, leaders[ids].astype(store_dt), ids.astype(np.int32))
 
     # leaf level: lvl_L clusters (item embeddings + item ids)
     store.create_group(layout.lvl_group(L))
@@ -167,12 +168,11 @@ def build_index(
     bounds = np.searchsorted(sorted_leaf, np.arange(n_leaders + 1))
     for j in range(n_leaders):
         members = order[bounds[j] : bounds[j + 1]]
-        g = layout.node_group(L, j)
-        store.create_group(g)
-        store.write_array(
-            f"{g}/{layout.EMB}",
+        store.write_node(
+            L,
+            j,
             np.asarray(data[members], store_dt),
+            item_ids[members].astype(np.int64),
             chunk_rows=cfg.leaf_chunk_rows,
         )
-        store.write_array(f"{g}/{layout.IDS}", item_ids[members].astype(np.int64))
     return store

@@ -57,14 +57,32 @@ class FStore:
             self._write_json(self.root / ".zgroup", {"zarr_format": 2})
         if not self.root.is_dir():
             raise FileNotFoundError(f"fstore root does not exist: {self.root}")
+        self._root = self.root.resolve()  # resolved ONCE; _p is on the hot path
         self._lock = threading.Lock()
+        self.io = None  # optional IOStats sink (set by FStoreBackend)
 
     # ---------------------------------------------------------------- paths
     def _p(self, path: str) -> Path:
-        p = (self.root / path).resolve()
-        if self.root.resolve() not in p.parents and p != self.root.resolve():
-            raise ValueError(f"path escapes store root: {path}")
-        return p
+        # Fast path: relative, '..'-free paths join the pre-resolved root
+        # without any syscalls (this is under every node read).  Only
+        # lexical escapes (absolute paths, '..' segments) pay for a resolve
+        # check; a symlink planted INSIDE the store pointing outside is
+        # deliberately not re-checked per access — the store owns its tree.
+        path = str(path)
+        if (
+            path.startswith(("/", "\\"))
+            or ":" in path.split("/", 1)[0]  # windows drive-absolute
+            or ".." in path.replace("\\", "/").split("/")
+        ):
+            p = (self._root / path).resolve()
+            if self._root not in p.parents and p != self._root:
+                raise ValueError(f"path escapes store root: {path}")
+            return p
+        return self._root / path
+
+    def _count_io(self, nbytes: int, *, files: int = 1, reads: int = 1) -> None:
+        if self.io is not None:
+            self.io.count(nbytes, files=files, reads=reads)
 
     def exists(self, path: str) -> bool:
         return self._p(path).exists()
@@ -100,9 +118,10 @@ class FStore:
         tmp.write_text(json.dumps(obj, indent=2, sort_keys=True))
         os.replace(tmp, p)
 
-    @staticmethod
-    def _read_json(p: Path) -> Any:
-        return json.loads(p.read_text())
+    def _read_json(self, p: Path) -> Any:
+        raw = p.read_bytes()
+        self._count_io(len(raw))
+        return json.loads(raw)
 
     # ---------------------------------------------------------------- groups
     def create_group(self, path: str, attrs: dict | None = None) -> None:
@@ -185,30 +204,43 @@ class FStore:
         for ci in range(n_chunks):
             name = str(ci) if not trailing_zeros else f"{ci}.{trailing_zeros}"
             raw = (p / name).read_bytes()
+            self._count_io(len(raw))
             block = np.frombuffer(raw, dtype=dt).reshape([cr] + shape[1:])
             parts.append(block)
         out = np.concatenate(parts, axis=0)[:rows] if parts else np.zeros(shape, dt)
         return np.ascontiguousarray(out.reshape(shape))
 
     def read_rows(self, path: str, lo: int, hi: int) -> np.ndarray:
-        """Partial read: only the chunks covering rows [lo, hi)."""
+        """Partial read of rows [lo, hi): reads only the BYTES covering the
+        requested rows of each chunk file (chunks are raw C-order with
+        leading-axis chunking, so a row range is contiguous in its chunk)."""
         meta = self.array_meta(path)
         shape, chunks = meta["shape"], meta["chunks"]
         dt = zarr_to_dtype(meta["dtype"])
         cr = chunks[0]
         hi = min(hi, shape[0])
+        lo = max(0, lo)
         if hi <= lo:
             return np.zeros([0] + shape[1:], dt)
         c_lo, c_hi = lo // cr, -(-hi // cr)
         p = self._p(path)
         trailing_zeros = ".".join(["0"] * (len(shape) - 1))
+        row_shape = shape[1:]
+        row_nbytes = dt.itemsize * int(np.prod(row_shape, dtype=np.int64))
         parts = []
         for ci in range(c_lo, c_hi):
             name = str(ci) if not trailing_zeros else f"{ci}.{trailing_zeros}"
-            raw = (p / name).read_bytes()
-            parts.append(np.frombuffer(raw, dtype=dt).reshape([cr] + shape[1:]))
-        block = np.concatenate(parts, axis=0)
-        return np.ascontiguousarray(block[lo - c_lo * cr : hi - c_lo * cr])
+            r_lo = max(lo - ci * cr, 0)          # first needed row inside chunk
+            r_hi = min(hi - ci * cr, cr)         # one past the last needed row
+            with open(p / name, "rb") as f:
+                if r_lo:
+                    f.seek(r_lo * row_nbytes)
+                raw = f.read((r_hi - r_lo) * row_nbytes)
+            self._count_io(len(raw))
+            parts.append(np.frombuffer(raw, dtype=dt).reshape([r_hi - r_lo] + row_shape))
+        if len(parts) == 1:
+            return np.ascontiguousarray(parts[0])
+        return np.ascontiguousarray(np.concatenate(parts, axis=0))
 
     def array_nbytes(self, path: str) -> int:
         meta = self.array_meta(path)

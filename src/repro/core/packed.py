@@ -19,6 +19,7 @@ import numpy as np
 
 from . import layout
 from .fstore import FStore
+from .store import FStoreBackend, Store, open_store
 
 
 @dataclass
@@ -72,21 +73,26 @@ class PackedIndex:
         return self.levels[-1]
 
 
-def load_packed(store: FStore, *, max_leaf_pad: int = 8) -> PackedIndex:
-    """Read the whole file structure into a PackedIndex (for device search)."""
+def load_packed(store, *, max_leaf_pad: int = 8, batch: int = 256) -> PackedIndex:
+    """Read a whole index into a PackedIndex (for device search).
+
+    ``store`` is any ``Store`` backend (fstore hierarchy or blob file), a
+    raw ``FStore``, or a path — node data comes through the protocol's
+    batched ``get_nodes`` so e.g. the blob backend coalesces its reads.
+    """
+    if isinstance(store, FStore):
+        store = FStoreBackend(store)
+    elif not isinstance(store, Store):
+        store = open_store(store)
     info = layout.IndexInfo.from_attrs(store.read_attrs(layout.INFO))
-    root_emb = store.read_array(f"{layout.ROOT}/{layout.EMB}").astype(np.float32)
+    root_emb, _ = store.get_node(0, 0)
     levels = []
     for lv in range(1, info.levels + 1):
-        n_nodes = info.nodes_per_level[lv - 1]
+        keys = [(lv, j) for j in range(info.nodes_per_level[lv - 1])]
         emb_lists, id_lists = [], []
-        for j in range(n_nodes):
-            g = layout.node_group(lv, j)
-            if store.exists(f"{g}/{layout.EMB}"):
-                emb_lists.append(store.read_array(f"{g}/{layout.EMB}"))
-                id_lists.append(store.read_array(f"{g}/{layout.IDS}"))
-            else:
-                emb_lists.append(np.zeros((0, info.dim), np.float32))
-                id_lists.append(np.zeros((0,), np.int32))
+        for lo in range(0, len(keys), batch):
+            for emb, ids in store.get_nodes(keys[lo : lo + batch]):
+                emb_lists.append(emb)
+                id_lists.append(ids)
         levels.append(pack_children(emb_lists, id_lists, info.dim, pad_multiple=max_leaf_pad))
     return PackedIndex(info=info, root_emb=root_emb, levels=levels)

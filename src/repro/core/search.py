@@ -37,9 +37,13 @@ import numpy as np
 from . import layout
 from .api import NodeCache, Query, ResultSet, SearchStats, pack_rows
 from .distances import np_distances
-from .fstore import FStore
+from .store import Store, open_store
 
 __all__ = ["ECPIndex", "ECPQuery", "QueryState", "NodeCache", "SearchStats"]
+
+# when expanding an internal node, asynchronously prefetch this many of its
+# nearest not-yet-resident children (only with a prefetch-capable store)
+PREFETCH_FANOUT = 8
 
 
 @dataclass
@@ -111,7 +115,7 @@ class ECPQuery(Query):
     def save(self, name: str | None = None, *, group: str = "query_states") -> str:
         """Persist all row states; returns the token ``load_query`` takes."""
         self._ensure_open()
-        store = self._index.store
+        store = self._index.state_store
         if name is None:
             existing = set(store.listdir(group)) if store.exists(group) else set()
             n = 0
@@ -161,26 +165,47 @@ class ECPIndex:
 
     def __init__(
         self,
-        path: str | FStore,
+        path: "str | Store",
         *,
+        backend: str = "auto",
+        prefetch: bool = False,
         cache: NodeCache | None = None,
         namespace: str | None = None,
         cache_max_nodes: int | None = None,
         cache_max_bytes: int | None = None,
         prefetch_workers: int = 4,
     ):
-        self.store = path if isinstance(path, FStore) else FStore(path)
+        self.store = (
+            path
+            if isinstance(path, Store)
+            else open_store(path, backend=backend, prefetch=prefetch,
+                            prefetch_workers=prefetch_workers)
+        )
         self.info = layout.IndexInfo.from_attrs(self.store.read_attrs(layout.INFO))
-        # Loading the index = read info + index_root only (paper §4.2).
-        self.root_emb = self.store.read_array(f"{layout.ROOT}/{layout.EMB}").astype(np.float32)
-        self.root_ids = self.store.read_array(f"{layout.ROOT}/{layout.IDS}")
+        # Loading the index = read info + the root node only (paper §4.2).
+        self.root_emb, self.root_ids = self.store.get_node(0, 0)
         self.cache = cache if cache is not None else NodeCache(
             cache_max_nodes, max_bytes=cache_max_bytes
         )
         # namespace tag keeps keys distinct inside a shared session cache
-        self._ns = namespace if namespace is not None else str(self.store.root)
+        self._ns = namespace if namespace is not None else str(self.store.path)
         self._prefetch_workers = prefetch_workers
+        # store-level async prefetch hook (AsyncPrefetchStore); None otherwise
+        self._store_prefetch = getattr(self.store, "prefetch", None)
         self.load_node_count = 0
+
+    @property
+    def state_store(self):
+        """The writable hierarchy store for query-state persistence (§6.2).
+
+        Only the fstore backend can hold per-query groups; the blob form
+        is a fixed-slot node file."""
+        if getattr(self.store, "fstore", None) is None:
+            raise NotImplementedError(
+                "query-state persistence (save/load_query) requires the "
+                f"fstore backend; this index uses {self.store.backend!r}"
+            )
+        return self.store
 
     # ------------------------------------------------------------ node IO
     def get_node(self, level: int, node: int) -> tuple[np.ndarray, np.ndarray]:
@@ -188,17 +213,34 @@ class ECPIndex:
         v = self.cache.get(key)
         if v is not None:
             return v
-        g = layout.node_group(level, node)
-        emb_path = f"{g}/{layout.EMB}"
-        if not self.store.exists(emb_path):
-            v = (np.zeros((0, self.info.dim), np.float32), np.zeros((0,), np.int64))
-        else:
-            emb = self.store.read_array(emb_path).astype(np.float32)  # f16 -> f32 (paper)
-            ids = self.store.read_array(f"{g}/{layout.IDS}")
-            v = (emb, ids)
+        v = self.store.get_node(level, node)
         self.load_node_count += 1
         self.cache.put(key, v)
         return v
+
+    def _on_prefetched(self, key, value) -> None:
+        """Prefetch sink: completed background reads land straight in the
+        (byte-budgeted) node cache instead of pinning store-side buffers."""
+        self.cache.put((self._ns, key[0], key[1]), value)
+
+    def get_nodes(self, keys: list) -> list:
+        """Cache-aware batched node read (one ``Store.get_nodes`` for the
+        misses, so a blob backend can coalesce adjacent blocks)."""
+        out: list = [None] * len(keys)
+        missing, missing_i = [], []
+        for i, (lv, nd) in enumerate(keys):
+            v = self.cache.get((self._ns, lv, nd))
+            if v is not None:
+                out[i] = v
+            else:
+                missing.append((lv, nd))
+                missing_i.append(i)
+        if missing:
+            for (lv, nd), i, v in zip(missing, missing_i, self.store.get_nodes(missing)):
+                self.load_node_count += 1
+                self.cache.put((self._ns, lv, nd), v)
+                out[i] = v
+        return out
 
     def prefetch(self, up_to_level: int) -> None:
         """Background-load all nodes at levels 1..up_to_level (paper §4.2)."""
@@ -207,8 +249,10 @@ class ECPIndex:
             for lv in range(1, min(up_to_level, self.info.levels) + 1)
             for j in range(self.info.nodes_per_level[lv - 1])
         ]
+        chunk = 64
+        batches = [keys[i : i + chunk] for i in range(0, len(keys), chunk)]
         with ThreadPoolExecutor(max_workers=self._prefetch_workers) as ex:
-            list(ex.map(lambda k: self.get_node(*k), keys))
+            list(ex.map(self.get_nodes, batches))
 
     # ------------------------------------------------------- Algorithm 1
     def search(
@@ -266,6 +310,7 @@ class ECPIndex:
         metric = info.metric
         leaf_cnt = 0
         loads_before = self.load_node_count
+        io_before = self.store.io.snapshot()
 
         if not qs.started:
             qs.started = True
@@ -296,6 +341,17 @@ class ECPIndex:
                     heapq.heappush(
                         qs.T, (float(cd), next(qs._tie), next_is_leaf, level + 1, int(c))
                     )
+                if self._store_prefetch is not None:
+                    # async: start loading the nearest children while the
+                    # traversal keeps scoring (frontier prefetch)
+                    order = np.argsort(d)[:PREFETCH_FANOUT]
+                    want = [
+                        (level + 1, int(ids[j]))
+                        for j in order
+                        if not self.cache.contains((self._ns, level + 1, int(ids[j])))
+                    ]
+                    if want:
+                        self._store_prefetch(want, on_node=self._on_prefetched)
             if is_leaf and leaf_cnt >= qs.b:
                 if len(qs.I) >= k:
                     break
@@ -306,21 +362,26 @@ class ECPIndex:
                 else:
                     break
         qs.stats.node_loads += self.load_node_count - loads_before
+        # NOTE: with an AsyncPrefetchStore, background reads count when they
+        # complete, so per-traversal io can lag slightly; store.drain() gives
+        # exact attribution (benchmarks use it between passes)
+        qs.stats.io.add(self.store.io.delta(io_before))
         qs.I.sort(key=lambda t: t[0])
 
     # -------------------------------------------------------- persistence
     def load_query(self, name: str, *, group: str = "query_states") -> ECPQuery:
         """Rehydrate a saved ``ECPQuery`` (token from ``ECPQuery.save``)."""
+        store = self.state_store
         g = f"{group}/{name}"
-        head = self.store.read_attrs(g)
+        head = store.read_attrs(g)
         n_rows = int(head.get("n_rows", 1))
         single = bool(head.get("single", n_rows == 1))
         states = []
         for r in range(n_rows):
             rg = f"{g}/row_{r:06d}"
-            a = self.store.read_attrs(rg)
+            a = store.read_attrs(rg)
             qs = QueryState(
-                q=self.store.read_array(f"{rg}/query"),
+                q=store.read_array(f"{rg}/query"),
                 b=int(a["b"]),
                 mx_inc=int(a["mx_inc"]),
                 exclude=set(a.get("exclude", [])),
@@ -328,10 +389,10 @@ class ECPIndex:
             qs.increments = int(a["increments"])
             qs.emitted = int(a["emitted"])
             qs.started = bool(a["started"])
-            d = self.store.read_array(f"{rg}/item_dists")
-            i = self.store.read_array(f"{rg}/item_ids")
+            d = store.read_array(f"{rg}/item_dists")
+            i = store.read_array(f"{rg}/item_ids")
             qs.I = [(float(x), int(y)) for x, y in zip(d, i)]
-            t = self.store.read_array(f"{rg}/frontier")
+            t = store.read_array(f"{rg}/frontier")
             for row in t:
                 heapq.heappush(
                     qs.T, (float(row[0]), next(qs._tie), int(row[1]), int(row[2]), int(row[3]))

@@ -1,0 +1,687 @@
+"""Pluggable node-storage backends — the I/O seam under every searcher.
+
+The paper's central question (verbose file structure vs compact serialized
+index) is an *I/O-layer* question, so the I/O layer is a protocol rather
+than a hard-wired ``FStore``:
+
+  ``Store``
+    * ``get_node(level, node)``          one node's (embeddings f32, ids)
+    * ``get_nodes([(level, node), ..])`` batched node reads (backends may
+                                         coalesce adjacent blocks)
+    * ``read_attrs`` / ``write_attrs``   JSON metadata (``info`` group)
+    * ``write_node(level, node, emb, ids)``
+    * ``io``                             an ``IOStats`` counter
+    * level 0, node 0 is the index root (``index_root`` in the file layout)
+
+  Backends (``open_store(path, backend=...)``):
+    * ``FStoreBackend`` — the paper's human-readable zarr-v2 hierarchy:
+      every node read opens JSON metadata plus raw chunk files.
+    * ``BlobStore``     — a single page-aligned file: fixed-size node
+      blocks after a small JSON header; one ``pread`` per node, adjacent
+      nodes coalesce into one read.  Built from any other store with
+      ``convert()``.
+    * ``AsyncPrefetchStore`` — wraps either backend with a thread pool so
+      the traversal can prefetch frontier children while scoring.
+
+``IOStats`` counts bytes read / files opened / reads issued; searchers
+snapshot it around each traversal and thread the delta into
+``SearchStats.io`` so file-vs-blob becomes a measurable axis.
+
+BlobStore on-disk format (``ecp-blob/1``)::
+
+  [0:8)    magic b"ECPBLOB1"
+  [8:16)   uint64 LE header length H
+  [16:16+H) JSON header: page_size, block_bytes, data_offset, dim,
+            emb_dtype, ids_dtype, info (index metadata), levels
+            (levels[lv] = per-node row counts; levels[0] = [root rows])
+  data_offset (page-aligned): one block per node, slot-ordered by
+            (level, node).  A block is n_rows embeddings (emb_dtype) then
+            n_rows ids (ids_dtype), zero-padded to block_bytes.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from pathlib import Path
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
+from . import layout
+from .fstore import FStore, dtype_to_zarr, zarr_to_dtype
+
+__all__ = [
+    "IOStats",
+    "Store",
+    "FStoreBackend",
+    "BlobStore",
+    "AsyncPrefetchStore",
+    "open_store",
+    "convert",
+    "BLOB_MAGIC",
+    "BLOB_FILENAME",
+]
+
+BLOB_MAGIC = b"ECPBLOB1"
+BLOB_FILENAME = "index.blob"
+
+
+# ------------------------------------------------------------------- IOStats
+class IOStats:
+    """Thread-safe I/O counters: bytes read, files opened, reads issued."""
+
+    __slots__ = ("bytes_read", "files_opened", "reads_issued", "_lock")
+
+    def __init__(self, bytes_read: int = 0, files_opened: int = 0, reads_issued: int = 0):
+        self.bytes_read = bytes_read
+        self.files_opened = files_opened
+        self.reads_issued = reads_issued
+        self._lock = threading.Lock()
+
+    def count(self, nbytes: int, *, files: int = 0, reads: int = 1) -> None:
+        with self._lock:
+            self.bytes_read += int(nbytes)
+            self.files_opened += files
+            self.reads_issued += reads
+
+    def snapshot(self) -> "IOStats":
+        with self._lock:
+            return IOStats(self.bytes_read, self.files_opened, self.reads_issued)
+
+    def delta(self, since: "IOStats") -> "IOStats":
+        with self._lock:
+            return IOStats(
+                self.bytes_read - since.bytes_read,
+                self.files_opened - since.files_opened,
+                self.reads_issued - since.reads_issued,
+            )
+
+    def add(self, other: "IOStats") -> None:
+        with self._lock:
+            self.bytes_read += other.bytes_read
+            self.files_opened += other.files_opened
+            self.reads_issued += other.reads_issued
+
+    def as_dict(self) -> dict:
+        with self._lock:
+            return {
+                "bytes_read": self.bytes_read,
+                "files_opened": self.files_opened,
+                "reads_issued": self.reads_issued,
+            }
+
+    def __repr__(self) -> str:
+        return (
+            f"IOStats(bytes_read={self.bytes_read}, "
+            f"files_opened={self.files_opened}, reads_issued={self.reads_issued})"
+        )
+
+
+# ------------------------------------------------------------------ protocol
+@runtime_checkable
+class Store(Protocol):
+    """Node storage for an eCP index; level 0 node 0 is the root."""
+
+    backend: str
+    io: IOStats
+
+    def get_node(self, level: int, node: int) -> tuple[np.ndarray, np.ndarray]:
+        ...
+
+    def get_nodes(self, keys: list) -> list:
+        ...
+
+    def read_attrs(self, path: str) -> dict:
+        ...
+
+    def write_attrs(self, path: str, attrs: dict) -> None:
+        ...
+
+    def write_node(self, level: int, node: int, emb: np.ndarray, ids: np.ndarray) -> None:
+        ...
+
+    def close(self) -> None:
+        ...
+
+
+def _node_group(level: int, node: int) -> str:
+    if level == 0:
+        if node != 0:
+            raise ValueError(f"level 0 has only the root node, got node {node}")
+        return layout.ROOT
+    return layout.node_group(level, node)
+
+
+# ------------------------------------------------------------- fstore backend
+class FStoreBackend:
+    """The paper's mode: nodes as zarr-v2 groups in a directory hierarchy.
+
+    Every hierarchy operation the index's persistence layer needs
+    (``read_array``, ``create_group``, ``listdir`` …) delegates to the
+    underlying ``FStore``, so this backend is a strict superset: it speaks
+    the ``Store`` protocol *and* remains the writable human-readable file
+    structure.
+    """
+
+    backend = "fstore"
+
+    def __init__(self, path: str | os.PathLike | FStore, *, create: bool = False):
+        self.fstore = path if isinstance(path, FStore) else FStore(path, create=create)
+        self.io = IOStats()
+        self.fstore.io = self.io  # FStore counts json/chunk reads into it
+        self.path = self.fstore.root
+        self._dim: int | None = None
+
+    def __getattr__(self, name):
+        # hierarchy ops (read_array, create_group, listdir, exists, ...)
+        if name == "fstore":  # pre-__init__ lookups must not recurse
+            raise AttributeError(name)
+        return getattr(self.fstore, name)
+
+    def _node_dim(self) -> int:
+        if self._dim is None:
+            self._dim = int(self.read_attrs(layout.INFO).get("dim", 0))
+        return self._dim
+
+    # -------------------------------------------------------------- protocol
+    def get_node(self, level: int, node: int) -> tuple[np.ndarray, np.ndarray]:
+        g = _node_group(level, node)
+        emb_path = f"{g}/{layout.EMB}"
+        if not self.fstore.exists(emb_path):
+            return (
+                np.zeros((0, self._node_dim()), np.float32),
+                np.zeros((0,), np.int64),
+            )
+        emb = self.fstore.read_array(emb_path).astype(np.float32)  # f16 -> f32
+        ids = self.fstore.read_array(f"{g}/{layout.IDS}")
+        return emb, ids
+
+    def get_nodes(self, keys: list) -> list:
+        # the file structure has no batched read primitive — that is the
+        # paper's trade-off this seam makes measurable
+        return [self.get_node(lv, nd) for lv, nd in keys]
+
+    def node_rows(self, keys: list) -> list[int]:
+        """Row counts without reading node data (one metadata read each)."""
+        out = []
+        for lv, nd in keys:
+            ids_path = f"{_node_group(lv, nd)}/{layout.IDS}"
+            if not self.fstore.exists(ids_path):
+                out.append(0)
+            else:
+                out.append(int(self.fstore.array_meta(ids_path)["shape"][0]))
+        return out
+
+    def read_attrs(self, path: str) -> dict:
+        return self.fstore.read_attrs(path)
+
+    def write_attrs(self, path: str, attrs: dict) -> None:
+        self.fstore.write_attrs(path, attrs)
+
+    def write_node(
+        self,
+        level: int,
+        node: int,
+        emb: np.ndarray,
+        ids: np.ndarray,
+        *,
+        chunk_rows: int | None = None,
+    ) -> None:
+        g = _node_group(level, node)
+        self.fstore.create_group(g)
+        self.fstore.write_array(f"{g}/{layout.EMB}", np.asarray(emb), chunk_rows=chunk_rows)
+        self.fstore.write_array(f"{g}/{layout.IDS}", np.asarray(ids))
+
+    def close(self) -> None:
+        pass
+
+
+# --------------------------------------------------------------- blob backend
+def _align(n: int, page: int) -> int:
+    return -(-n // page) * page
+
+
+class BlobStore:
+    """Page-aligned single-file backend: one ``pread`` per node.
+
+    Read-only by design except ``write_node`` over an existing slot (the
+    new node data must fit the fixed block size).  Build the file from any
+    other store with ``convert()``.
+    """
+
+    backend = "blob"
+
+    def __init__(self, path: str | os.PathLike):
+        p = Path(path)
+        if p.is_dir():
+            p = p / BLOB_FILENAME
+        if not p.is_file():
+            raise FileNotFoundError(f"blob store does not exist: {p}")
+        self.path = p
+        self.io = IOStats()
+        try:
+            self._fd = os.open(p, os.O_RDWR)
+            self._writable = True
+        except OSError:  # EACCES, EROFS (read-only mounts), ...
+            self._fd = os.open(p, os.O_RDONLY)
+            self._writable = False
+        head = os.pread(self._fd, 16, 0)
+        if head[:8] != BLOB_MAGIC:
+            os.close(self._fd)
+            self._fd = -1
+            raise ValueError(f"not an ecp-blob file (bad magic): {p}")
+        (hlen,) = np.frombuffer(head[8:16], "<u8")
+        raw = os.pread(self._fd, int(hlen), 16)
+        self.io.count(16 + int(hlen), files=1, reads=2)
+        self._header = json.loads(raw.decode("utf-8"))
+        h = self._header
+        self.page_size = int(h["page_size"])
+        self.block_bytes = int(h["block_bytes"])
+        self.data_offset = int(h["data_offset"])
+        self.dim = int(h["dim"])
+        self.emb_dtype = zarr_to_dtype(h["emb_dtype"])
+        self.ids_dtype = zarr_to_dtype(h["ids_dtype"])
+        # levels[lv] = list of per-node row counts; levels[0] = [root rows]
+        self._n_rows: list[list[int]] = [list(map(int, lv)) for lv in h["levels"]]
+        self._slot0 = np.cumsum([0] + [len(lv) for lv in self._n_rows]).tolist()
+        self._row_bytes = self.dim * self.emb_dtype.itemsize + self.ids_dtype.itemsize
+        self._lock = threading.Lock()  # serializes header rewrites only
+
+    # ---------------------------------------------------------------- layout
+    def _slot(self, level: int, node: int) -> int:
+        if not (0 <= level < len(self._n_rows)):
+            raise KeyError(f"no such level in blob: {level}")
+        if not (0 <= node < len(self._n_rows[level])):
+            raise KeyError(f"no such node in blob: lvl {level} node {node}")
+        if level == 0 and node != 0:
+            raise KeyError("level 0 has only the root node")
+        return self._slot0[level] + node
+
+    def _offset(self, slot: int) -> int:
+        return self.data_offset + slot * self.block_bytes
+
+    def _parse_block(self, buf: bytes, n_rows: int) -> tuple[np.ndarray, np.ndarray]:
+        eb = n_rows * self.dim * self.emb_dtype.itemsize
+        emb = (
+            np.frombuffer(buf, self.emb_dtype, count=n_rows * self.dim)
+            .reshape(n_rows, self.dim)
+            .astype(np.float32)
+        )
+        ids = np.frombuffer(buf, self.ids_dtype, count=n_rows, offset=eb).copy()
+        return emb, ids
+
+    # -------------------------------------------------------------- protocol
+    def get_node(self, level: int, node: int) -> tuple[np.ndarray, np.ndarray]:
+        slot = self._slot(level, node)
+        n_rows = self._n_rows[level][node]
+        if n_rows == 0:
+            return np.zeros((0, self.dim), np.float32), np.zeros((0,), self.ids_dtype)
+        need = n_rows * self._row_bytes
+        buf = os.pread(self._fd, need, self._offset(slot))
+        self.io.count(need, reads=1)
+        return self._parse_block(buf, n_rows)
+
+    def get_nodes(self, keys: list) -> list:
+        """Batched read; runs of adjacent slots coalesce into one pread."""
+        slots = []
+        for i, (lv, nd) in enumerate(keys):
+            slots.append((self._slot(lv, nd), self._n_rows[lv][nd], i))
+        slots.sort()
+        out: list = [None] * len(keys)
+        j = 0
+        while j < len(slots):
+            # grow a run of consecutive slots
+            r = j
+            while r + 1 < len(slots) and slots[r + 1][0] == slots[r][0] + 1:
+                r += 1
+            first_slot = slots[j][0]
+            last_slot, last_rows, _ = slots[r]
+            need = (last_slot - first_slot) * self.block_bytes + last_rows * self._row_bytes
+            if need > 0:
+                buf = os.pread(self._fd, need, self._offset(first_slot))
+                self.io.count(need, reads=1)
+            else:
+                buf = b""
+            for s in range(j, r + 1):
+                slot, n_rows, i = slots[s]
+                rel = (slot - first_slot) * self.block_bytes
+                if n_rows == 0:
+                    out[i] = (
+                        np.zeros((0, self.dim), np.float32),
+                        np.zeros((0,), self.ids_dtype),
+                    )
+                else:
+                    out[i] = self._parse_block(
+                        buf[rel : rel + n_rows * self._row_bytes], n_rows
+                    )
+            j = r + 1
+        return out
+
+    def node_rows(self, keys: list) -> list[int]:
+        """Row counts straight from the in-memory header (no I/O)."""
+        return [self._n_rows[lv][nd] for lv, nd in keys]
+
+    def read_attrs(self, path: str) -> dict:
+        if path == layout.INFO:
+            return dict(self._header["info"])
+        return {}
+
+    def write_attrs(self, path: str, attrs: dict) -> None:
+        if not self._writable:
+            raise PermissionError(f"blob store opened read-only: {self.path}")
+        if path != layout.INFO:
+            raise ValueError(
+                f"blob store only holds '{layout.INFO}' attributes, not {path!r}"
+            )
+        with self._lock:
+            self._header["info"] = dict(attrs)
+            self._rewrite_header_locked()
+
+    def write_node(self, level: int, node: int, emb: np.ndarray, ids: np.ndarray) -> None:
+        """In-place node update (new data must fit the fixed block).
+
+        NOT crash-atomic: the block and header are two in-place writes, so
+        a crash between them can leave a stale row count over new bytes.
+        The blob is a derived serving artifact — the writable source of
+        truth is the fstore hierarchy (every write there goes through
+        tmp + os.replace); rebuild a torn blob with ``convert()``.
+        """
+        if not self._writable:
+            raise PermissionError(f"blob store opened read-only: {self.path}")
+        emb = np.ascontiguousarray(np.asarray(emb), dtype=self.emb_dtype)
+        ids = np.ascontiguousarray(np.asarray(ids), dtype=self.ids_dtype)
+        if emb.ndim != 2 or emb.shape[1] != self.dim or emb.shape[0] != ids.shape[0]:
+            raise ValueError(
+                f"write_node shape mismatch: emb {emb.shape} ids {ids.shape} dim {self.dim}"
+            )
+        n_rows = emb.shape[0]
+        need = n_rows * self._row_bytes
+        if need > self.block_bytes:
+            raise ValueError(
+                f"node data ({need} B) exceeds the fixed block size "
+                f"({self.block_bytes} B); rebuild the blob with convert()"
+            )
+        slot = self._slot(level, node)
+        block = emb.tobytes() + ids.tobytes()
+        block += b"\0" * (self.block_bytes - len(block))
+        with self._lock:
+            os.pwrite(self._fd, block, self._offset(slot))
+            self._n_rows[level][node] = n_rows
+            self._rewrite_header_locked()
+
+    def _rewrite_header_locked(self) -> None:
+        self._header["levels"] = self._n_rows
+        raw = json.dumps(self._header, sort_keys=True).encode("utf-8")
+        if 16 + len(raw) > self.data_offset:
+            raise ValueError("blob header grew past the data region; rebuild with convert()")
+        pad = b" " * (self.data_offset - 16 - len(raw))
+        os.pwrite(self._fd, BLOB_MAGIC + len(raw).to_bytes(8, "little") + raw + pad, 0)
+
+    def close(self) -> None:
+        if getattr(self, "_fd", -1) >= 0:
+            os.close(self._fd)
+            self._fd = -1
+
+    def __del__(self):  # best-effort; close() is the real API
+        try:
+            self.close()
+        except OSError:
+            pass
+
+
+def convert(
+    src: "Store | str | os.PathLike",
+    dst: str | os.PathLike,
+    *,
+    page_size: int = 4096,
+) -> Path:
+    """Serialize any ``Store``'s index into a page-aligned blob file.
+
+    Returns the path of the written blob.  Embeddings are stored in the
+    index's own storage dtype (``info['dtype']``, e.g. float16) so reads
+    are bit-identical with the source backend's ``get_node``.
+    """
+    store = src if isinstance(src, Store) else open_store(src)
+    info = store.read_attrs(layout.INFO)
+    if not info:
+        raise ValueError("source store has no index info; not an eCP index?")
+    dim = int(info["dim"])
+    emb_dt = np.dtype(info.get("dtype", "float16"))
+    ids_dt = np.dtype(np.int64)
+    levels = int(info["levels"])
+    nodes_per_level = [int(x) for x in info["nodes_per_level"]]
+
+    keys = [(0, 0)] + [
+        (lv, nd) for lv in range(1, levels + 1) for nd in range(nodes_per_level[lv - 1])
+    ]
+    n_rows: list[list[int]] = [[] for _ in range(levels + 1)]
+    row_bytes = dim * emb_dt.itemsize + ids_dt.itemsize
+    max_block = page_size
+
+    dst = Path(dst)
+    if dst.is_dir():
+        dst = dst / BLOB_FILENAME
+    dst.parent.mkdir(parents=True, exist_ok=True)
+
+    # pass 1: row counts to size the fixed blocks — metadata only where the
+    # backend supports it (node_rows), never the embedding bytes themselves
+    batch = 512
+    rows_fn = getattr(store, "node_rows", None)
+    if rows_fn is not None:
+        counts = rows_fn(keys)
+    else:
+        counts = []
+        for lo in range(0, len(keys), batch):
+            counts.extend(len(ids) for _, ids in store.get_nodes(keys[lo : lo + batch]))
+    for (lv, nd), n in zip(keys, counts):
+        n_rows[lv].append(int(n))
+        max_block = max(max_block, int(n) * row_bytes)
+    block_bytes = _align(max_block, page_size)
+
+    header = {
+        "format": "ecp-blob/1",
+        "page_size": page_size,
+        "block_bytes": block_bytes,
+        "dim": dim,
+        "emb_dtype": dtype_to_zarr(emb_dt),
+        "ids_dtype": dtype_to_zarr(ids_dt),
+        "info": dict(info),
+        "levels": n_rows,
+    }
+    # reserve one spare page so in-place header rewrites (write_node row
+    # count changes) never collide with the data region
+    raw = json.dumps(header, sort_keys=True).encode("utf-8")
+    data_offset = _align(16 + len(raw), page_size) + page_size
+    header["data_offset"] = data_offset
+    raw = json.dumps(header, sort_keys=True).encode("utf-8")
+
+    tmp = dst.with_suffix(dst.suffix + ".tmp")
+    with open(tmp, "wb") as f:
+        f.write(BLOB_MAGIC)
+        f.write(len(raw).to_bytes(8, "little"))
+        f.write(raw)
+        f.write(b" " * (data_offset - 16 - len(raw)))
+        for lo in range(0, len(keys), batch):
+            for emb, ids in store.get_nodes(keys[lo : lo + batch]):
+                b = (
+                    np.ascontiguousarray(emb, dtype=emb_dt).tobytes()
+                    + np.ascontiguousarray(ids, dtype=ids_dt).tobytes()
+                )
+                f.write(b)
+                f.write(b"\0" * (block_bytes - len(b)))
+    os.replace(tmp, dst)
+    return dst
+
+
+# ------------------------------------------------------------ async prefetch
+class AsyncPrefetchStore:
+    """Wrap any ``Store`` with a thread pool for asynchronous node reads.
+
+    ``prefetch(keys)`` schedules background ``get_node`` calls; a later
+    ``get_node``/``get_nodes`` for the same key joins the in-flight future
+    instead of touching the disk again.  The traversal uses this to load
+    the frontier's children while distance math runs.
+    """
+
+    def __init__(self, inner, *, workers: int = 4, max_inflight: int = 128):
+        self.inner = inner
+        self.backend = f"{inner.backend}+prefetch"
+        self._ex = ThreadPoolExecutor(max_workers=workers, thread_name_prefix="store-prefetch")
+        self._futures: dict = {}
+        self._lock = threading.Lock()
+        self.prefetch_issued = 0
+        self.prefetch_hits = 0
+        self._max_inflight = max_inflight
+
+    @property
+    def io(self) -> IOStats:
+        return self.inner.io
+
+    def __getattr__(self, name):
+        if name == "inner":  # pre-__init__ lookups must not recurse
+            raise AttributeError(name)
+        return getattr(self.inner, name)
+
+    def prefetch(self, keys: list, on_node=None) -> None:
+        """Schedule background reads for ``keys``.
+
+        ``on_node(key, (emb, ids))`` — optional sink called from the worker
+        thread when a read completes; the future is dropped immediately so
+        prefetched data lives in the caller's (byte-budgeted) cache, not
+        pinned here.  Without a sink, results wait in the in-flight table
+        (bounded by ``max_inflight``) until a demand read consumes them.
+        """
+        submitted = []
+        with self._lock:
+            if self._ex is None:
+                return
+            for key in keys:
+                if key in self._futures:
+                    continue
+                if len(self._futures) >= self._max_inflight:
+                    # drop consumed-done entries first; if still full, skip
+                    done = [k for k, f in self._futures.items() if f.done()]
+                    for k in done[: len(self._futures) - self._max_inflight + 1]:
+                        del self._futures[k]
+                    if len(self._futures) >= self._max_inflight:
+                        break
+                f = self._ex.submit(self.inner.get_node, *key)
+                self._futures[key] = f
+                self.prefetch_issued += 1
+                submitted.append((key, f))
+        if on_node is None:
+            return
+        for key, f in submitted:
+            # registered OUTSIDE the lock: a completed future runs the
+            # callback inline, and the callback takes the lock itself
+            def _done(fut, key=key):
+                with self._lock:
+                    self._futures.pop(key, None)
+                if not fut.cancelled() and fut.exception() is None:
+                    on_node(key, fut.result())
+
+            f.add_done_callback(_done)
+
+    def drain(self) -> None:
+        """Block until every in-flight prefetch has completed (and counted
+        its I/O).  Benchmarks call this before snapshotting ``io`` so async
+        reads issued during a pass are attributed to that pass."""
+        with self._lock:
+            pending = list(self._futures.values())
+        for f in pending:
+            try:
+                f.result()
+            except Exception:
+                pass  # a failed prefetch surfaces on the demand-read path
+
+    def _pop(self, key):
+        with self._lock:
+            return self._futures.pop(key, None)
+
+    def get_node(self, level: int, node: int) -> tuple[np.ndarray, np.ndarray]:
+        f = self._pop((level, node))
+        if f is not None:
+            self.prefetch_hits += 1
+            return f.result()
+        return self.inner.get_node(level, node)
+
+    def get_nodes(self, keys: list) -> list:
+        out: list = [None] * len(keys)
+        missing, missing_i = [], []
+        for i, key in enumerate(keys):
+            f = self._pop(tuple(key))
+            if f is not None:
+                self.prefetch_hits += 1
+                out[i] = f.result()
+            else:
+                missing.append(key)
+                missing_i.append(i)
+        if missing:
+            for i, v in zip(missing_i, self.inner.get_nodes(missing)):
+                out[i] = v
+        return out
+
+    def read_attrs(self, path: str) -> dict:
+        return self.inner.read_attrs(path)
+
+    def write_attrs(self, path: str, attrs: dict) -> None:
+        self.inner.write_attrs(path, attrs)
+
+    def write_node(self, level: int, node: int, emb, ids, **kw) -> None:
+        self.inner.write_node(level, node, emb, ids, **kw)
+
+    def close(self) -> None:
+        with self._lock:
+            ex, self._ex = self._ex, None
+            self._futures.clear()
+        if ex is not None:
+            ex.shutdown(wait=False)
+        self.inner.close()
+
+
+# ------------------------------------------------------------------- factory
+def open_store(
+    path: "str | os.PathLike | Store",
+    backend: str = "auto",
+    *,
+    create: bool = False,
+    prefetch: bool = False,
+    prefetch_workers: int = 4,
+) -> Store:
+    """Open an index's node storage.
+
+    backend="fstore"  -> the zarr-v2 directory hierarchy (paper's mode).
+    backend="blob"    -> the page-aligned single-file form (``convert()``).
+    backend="auto"    -> blob when ``path`` is a blob file or a directory
+                         holding ``index.blob``; otherwise fstore.
+    prefetch=True     -> wrap the backend in ``AsyncPrefetchStore``; the
+                         spelling ``backend="<name>+prefetch"`` is
+                         equivalent.
+    """
+    if backend.endswith("+prefetch"):
+        backend = backend[: -len("+prefetch")]
+        prefetch = True
+    if isinstance(path, Store):
+        store = path
+    elif isinstance(path, FStore):
+        store = FStoreBackend(path)
+    else:
+        p = Path(path)
+        if backend == "auto":
+            if p.is_file() or (p / BLOB_FILENAME).is_file():
+                backend = "blob"
+            else:
+                backend = "fstore"
+        if backend == "fstore":
+            store = FStoreBackend(p, create=create)
+        elif backend == "blob":
+            if create:
+                raise ValueError("blob stores are created with convert(), not create=True")
+            store = BlobStore(p)
+        else:
+            raise ValueError(f"unknown store backend: {backend!r} (fstore|blob|auto)")
+    if prefetch and not isinstance(store, AsyncPrefetchStore):
+        store = AsyncPrefetchStore(store, workers=prefetch_workers)
+    return store

@@ -25,6 +25,7 @@ from repro.core import (
     ResultSet,
     Searcher,
     build_index,
+    convert,
     open_index,
 )
 from repro.data import clustered_vectors
@@ -95,7 +96,7 @@ class Server:
         return len(self._sessions)
 
 
-def demo() -> None:
+def demo(backend: str = "fstore") -> None:
     import tempfile
 
     data, _ = clustered_vectors(0, n=50_000, dim=128, n_clusters=256)
@@ -103,17 +104,24 @@ def demo() -> None:
         path = td + "/idx"
         print("building index ...")
         build_index(data, path, ECPBuildConfig(levels=2, cluster_cap=200, metric="l2"))
+        blob = str(convert(path, td + "/idx.blob"))
         rng = np.random.default_rng(1)
         qs = data[rng.integers(0, len(data), 32)] + 0.01 * rng.normal(size=(32, 128)).astype(np.float32)
 
-        # interactive: the paper's mode — one request at a time, bounded RAM
-        srv = Server(open_index(path, mode="file", cache_max_nodes=64))
+        # interactive: the paper's mode — one request at a time, bounded RAM;
+        # the node storage is the --backend axis (fstore | blob | blob+prefetch)
+        idx = open_index(
+            path if backend == "fstore" else blob,
+            mode="file", backend=backend, cache_max_nodes=64,
+        )
+        srv = Server(idx)
         sids = [srv.search(q, k=20, b=8)[1] for q in qs]
         for sid in sids[:8]:
             srv.more(sid, k=20)
         for sid in sids:
             srv.close(sid)
-        print("interactive:", srv.stats.summary())
+        print(f"interactive[{backend}]:", srv.stats.summary())
+        print("  store io:", idx.store.io.as_dict())
 
         # batched: same Server, device searcher, whole batch per tick
         bsrv = Server(open_index(path, mode="packed"))
@@ -126,8 +134,12 @@ def demo() -> None:
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--demo", action="store_true")
+    ap.add_argument(
+        "--backend", choices=("fstore", "blob", "blob+prefetch"), default="fstore",
+        help="node storage for the interactive (file-mode) server",
+    )
     args = ap.parse_args()
     if args.demo:
-        demo()
+        demo(args.backend)
     else:
         print("use --demo (library mode: import Server + repro.core.open_index)")

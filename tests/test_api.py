@@ -138,6 +138,57 @@ def test_node_cache_byte_budget():
     c.resize(max_bytes=0)
 
 
+def _entry(rows=10, dim=32):
+    return (np.zeros((rows, dim), np.float32), np.zeros((rows,), np.int64))
+
+
+def test_node_cache_zero_and_negative_budgets():
+    """Budget <= 0 means caching off: puts are dropped, nothing wedges."""
+    for budget in (0, -1, -10_000):
+        c = NodeCache(max_bytes=budget)
+        c.put(("ns", 1, 0), _entry())
+        assert c.n_resident == 0 and c.resident_bytes == 0
+        assert c.get(("ns", 1, 0)) is None  # miss, not a crash
+    c = NodeCache(max_nodes=-3)
+    c.put(("ns", 1, 0), _entry())
+    assert c.n_resident == 0
+    # resizing to a negative budget behaves like 0 (evict all, caching off)
+    c2 = NodeCache(max_bytes=10_000)
+    c2.put(("ns", 1, 0), _entry())
+    c2.resize(max_bytes=-5)
+    assert c2.n_resident == 0
+    c2.put(("ns", 1, 1), _entry())
+    assert c2.n_resident == 0
+
+
+def test_node_cache_entry_larger_than_whole_budget():
+    """An entry that alone exceeds the budget must not wedge the cache: it
+    is evicted immediately and later puts still work."""
+    c = NodeCache(max_bytes=1_000)
+    c.put(("ns", 1, 0), _entry(rows=100))         # ~40 KB >> 1 KB budget
+    assert c.n_resident == 0 and c.resident_bytes == 0
+    c.put(("ns", 1, 1), _entry(rows=2))           # small entry fits
+    assert c.n_resident == 1
+    assert c.get(("ns", 1, 1)) is not None
+
+
+def test_node_cache_resize_below_residency_evicts():
+    c = NodeCache(max_bytes=1 << 20)
+    for j in range(8):
+        c.put(("ns", 1, j), _entry())
+    full = c.resident_bytes
+    assert c.n_resident == 8 and full > 0
+    c.resize(max_bytes=full // 4)                  # shrink below residency
+    assert c.resident_bytes <= full // 4
+    assert c.evictions > 0
+    # LRU: the survivors are the most recently inserted keys
+    assert c.contains(("ns", 1, 7))
+    assert not c.contains(("ns", 1, 0))
+    # still fully functional after the shrink
+    c.put(("ns", 1, 99), _entry(rows=1))
+    assert c.get(("ns", 1, 99)) is not None
+
+
 def test_multi_index_session_respects_shared_budget(built, tmp_path_factory):
     data, path = built
     data2, _ = clustered_vectors(9, n=6000, dim=32, n_clusters=48)

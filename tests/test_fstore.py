@@ -48,6 +48,42 @@ def test_empty_and_scalar(store):
     assert store.read_array("s")[0] == 7
 
 
+def test_zero_row_roundtrip_all_shapes(store):
+    """rows == 0 exercises the final-chunk padding path: the writer still
+    emits one (padded) chunk and the reader must slice back to 0 rows."""
+    for name, arr in (
+        ("z1", np.zeros((0,), np.int32)),
+        ("z2", np.zeros((0, 3), np.float32)),
+        ("z3", np.zeros((0, 2, 5), np.float16)),
+    ):
+        store.write_array(name, arr, chunk_rows=4)
+        back = store.read_array(name)
+        assert back.shape == arr.shape and back.dtype == arr.dtype
+        meta = store.array_meta(name)
+        assert meta["shape"][0] == 0 and meta["chunks"][0] == 1
+        # partial reads of an empty array are empty, not an error
+        assert store.read_rows(name, 0, 10).shape[0] == 0
+
+
+def test_read_rows_reads_only_needed_bytes(store):
+    """A 2-row read from a large chunked array must not materialize whole
+    chunks (satellite: slice at the file level, not post-concatenate)."""
+    from repro.core.store import IOStats
+
+    a = np.random.default_rng(1).normal(size=(10_000, 16)).astype(np.float32)
+    store.write_array("big", a, chunk_rows=5_000)
+    store.io = IOStats()
+    got = store.read_rows("big", 4_998, 5_000)  # 2 rows, last rows of chunk 0
+    np.testing.assert_array_equal(got, a[4_998:5_000])
+    row_bytes = 16 * 4
+    # json metadata + exactly 2 rows — far below one 5000-row chunk
+    assert store.io.bytes_read < 2 * row_bytes + 4_096
+    store.io = IOStats()
+    got = store.read_rows("big", 4_999, 5_001)  # straddles the chunk boundary
+    np.testing.assert_array_equal(got, a[4_999:5_001])
+    assert store.io.bytes_read < 2 * row_bytes + 4_096
+
+
 def test_attrs_groups(store):
     store.create_group("g", attrs={"metric": "l2", "levels": 3})
     assert store.read_attrs("g")["levels"] == 3

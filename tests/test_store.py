@@ -1,0 +1,298 @@
+"""Store protocol: backend factory, blob format, fstore/blob/prefetch
+parity (bit-identical), batched reads, IOStats threading, write_node."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AsyncPrefetchStore,
+    BlobStore,
+    ECPBuildConfig,
+    FStoreBackend,
+    Store,
+    build_index,
+    convert,
+    open_index,
+    open_store,
+)
+from repro.core import layout
+from repro.core.store import BLOB_MAGIC
+from repro.data import clustered_vectors
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    data, _ = clustered_vectors(5, n=5000, dim=24, n_clusters=40)
+    path = tmp_path_factory.mktemp("store_idx") / "ecp"
+    build_index(data, str(path), ECPBuildConfig(levels=2, metric="l2", cluster_cap=64, seed=2))
+    blob = convert(str(path), tmp_path_factory.mktemp("store_blob") / "idx.blob")
+    return data, str(path), str(blob)
+
+
+# ----------------------------------------------------------------- factory
+def test_open_store_returns_all_three_backends(built):
+    _, path, blob = built
+    fs = open_store(path, backend="fstore")
+    bs = open_store(blob, backend="blob")
+    ps = open_store(blob, backend="blob", prefetch=True)
+    assert isinstance(fs, FStoreBackend) and fs.backend == "fstore"
+    assert isinstance(bs, BlobStore) and bs.backend == "blob"
+    assert isinstance(ps, AsyncPrefetchStore) and ps.backend == "blob+prefetch"
+    for s in (fs, bs, ps):
+        assert isinstance(s, Store)
+    # the "<name>+prefetch" spelling is equivalent to prefetch=True
+    ps2 = open_store(blob, backend="blob+prefetch")
+    assert isinstance(ps2, AsyncPrefetchStore) and ps2.inner.backend == "blob"
+    # a raw FStore still opens (wrapped into the protocol backend)
+    from repro.core import FStore
+
+    wrapped = open_store(FStore(path))
+    assert isinstance(wrapped, FStoreBackend)
+    with pytest.raises(ValueError):
+        open_store(path, backend="nope")
+
+
+def test_open_store_auto_detection(built, tmp_path):
+    _, path, blob = built
+    assert open_store(path, backend="auto").backend == "fstore"
+    assert open_store(blob, backend="auto").backend == "blob"
+    # a directory holding index.blob is detected as blob
+    d = tmp_path / "blobdir"
+    d.mkdir()
+    (d / "index.blob").write_bytes((open(blob, "rb").read()))
+    assert open_store(d, backend="auto").backend == "blob"
+
+
+# ------------------------------------------------------------- blob format
+def test_blob_on_disk_format(built):
+    _, _, blob = built
+    raw = open(blob, "rb").read(16)
+    assert raw[:8] == BLOB_MAGIC
+    hlen = int(np.frombuffer(raw[8:16], "<u8")[0])
+    header = json.loads(open(blob, "rb").read()[16 : 16 + hlen])
+    assert header["format"] == "ecp-blob/1"
+    page = header["page_size"]
+    assert header["data_offset"] % page == 0
+    assert header["block_bytes"] % page == 0
+    # file size = data region end
+    n_slots = sum(len(lv) for lv in header["levels"])
+    assert os.path.getsize(blob) == header["data_offset"] + n_slots * header["block_bytes"]
+    # info in the header matches the fstore's info attrs
+    bs = BlobStore(blob)
+    assert bs.read_attrs(layout.INFO)["dim"] == header["info"]["dim"]
+    assert bs.read_attrs("somewhere/else") == {}
+
+
+def test_blob_rejects_garbage(tmp_path):
+    p = tmp_path / "junk.blob"
+    p.write_bytes(b"NOTABLOB" + b"\0" * 64)
+    with pytest.raises(ValueError):
+        BlobStore(p)
+    with pytest.raises(FileNotFoundError):
+        BlobStore(tmp_path / "missing.blob")
+
+
+# ----------------------------------------------------------------- parity
+def test_node_reads_bit_identical_across_backends(built):
+    _, path, blob = built
+    fs = open_store(path)
+    bs = open_store(blob)
+    info = fs.read_attrs(layout.INFO)
+    keys = [(0, 0)] + [
+        (lv, nd)
+        for lv in range(1, int(info["levels"]) + 1)
+        for nd in range(int(info["nodes_per_level"][lv - 1]))
+    ]
+    batched = bs.get_nodes(keys)
+    for key, (be, bi) in zip(keys, batched):
+        fe, fi = fs.get_node(*key)
+        np.testing.assert_array_equal(fe, be)
+        np.testing.assert_array_equal(np.asarray(fi, np.int64), np.asarray(bi, np.int64))
+
+
+def test_search_results_bit_identical_across_backends(built):
+    data, path, blob = built
+    fidx = open_index(path, mode="file", backend="fstore")
+    bidx = open_index(blob, mode="file", backend="blob")
+    pidx = open_index(blob, mode="file", backend="blob", prefetch=True)
+    rng = np.random.default_rng(2)
+    qs = data[rng.integers(0, len(data), 12)]
+    for q in qs:
+        rf = fidx.search(q, k=10, b=8)
+        rb = bidx.search(q, k=10, b=8)
+        rp = pidx.search(q, k=10, b=8)
+        np.testing.assert_array_equal(rf.ids, rb.ids)
+        np.testing.assert_array_equal(rf.dists, rb.dists)
+        np.testing.assert_array_equal(rf.ids, rp.ids)
+        np.testing.assert_array_equal(rf.dists, rp.dists)
+
+
+def test_packed_load_identical_from_blob(built):
+    from repro.core import load_packed
+
+    _, path, blob = built
+    p1 = load_packed(open_store(path))
+    p2 = load_packed(open_store(blob))
+    np.testing.assert_array_equal(p1.root_emb, p2.root_emb)
+    assert len(p1.levels) == len(p2.levels)
+    for a, b in zip(p1.levels, p2.levels):
+        np.testing.assert_array_equal(a.emb, b.emb)
+        np.testing.assert_array_equal(a.ids, b.ids)
+        np.testing.assert_array_equal(a.mask, b.mask)
+
+
+# ------------------------------------------------------------ batched reads
+def test_get_nodes_matches_get_node_and_coalesces(built):
+    _, _, blob = built
+    bs = open_store(blob)
+    keys = [(2, j) for j in range(12)]
+    singles = [bs.get_node(*k) for k in keys]
+    bs2 = open_store(blob)
+    before = bs2.io.snapshot()
+    batched = bs2.get_nodes(keys)
+    d = bs2.io.delta(before)
+    assert d.reads_issued == 1, "adjacent blob slots should coalesce into one read"
+    for (e1, i1), (e2, i2) in zip(singles, batched):
+        np.testing.assert_array_equal(e1, e2)
+        np.testing.assert_array_equal(i1, i2)
+    # unordered / duplicate-free scattered keys still come back aligned
+    scattered = [(2, 9), (1, 0), (2, 3), (0, 0)]
+    got = bs.get_nodes(scattered)
+    for key, (e, i) in zip(scattered, got):
+        e1, i1 = bs.get_node(*key)
+        np.testing.assert_array_equal(e, e1)
+        np.testing.assert_array_equal(i, i1)
+
+
+# ----------------------------------------------------------------- IOStats
+def test_iostats_blob_fewer_reads_than_fstore(built):
+    data, path, blob = built
+    fidx = open_index(path, mode="file", backend="fstore")
+    bidx = open_index(blob, mode="file", backend="blob")
+    f0, b0 = fidx.store.io.snapshot(), bidx.store.io.snapshot()
+    rng = np.random.default_rng(3)
+    for q in data[rng.integers(0, len(data), 8)]:
+        fidx.search(q, k=10, b=8)
+        bidx.search(q, k=10, b=8)
+    f_io = fidx.store.io.delta(f0)
+    b_io = bidx.store.io.delta(b0)
+    assert f_io.reads_issued > 0 and b_io.reads_issued > 0
+    assert b_io.reads_issued < f_io.reads_issued
+    assert b_io.files_opened < f_io.files_opened
+    assert b_io.bytes_read <= f_io.bytes_read  # no JSON / chunk padding overhead
+
+
+def test_iostats_threaded_into_search_stats(built):
+    data, path, _ = built
+    idx = open_index(path, mode="file", backend="fstore")
+    rs = idx.search(data[0], k=10, b=8)
+    st = rs.query.stats
+    assert st.io.reads_issued > 0 and st.io.bytes_read > 0
+    # warm repeat: everything cached, no new node I/O for the same query
+    rs2 = idx.search(data[0], k=10, b=8)
+    assert rs2.query.stats.io.reads_issued == 0
+
+
+# ------------------------------------------------------------- write paths
+def test_blob_write_node_roundtrip_and_overflow(built, tmp_path):
+    _, path, _ = built
+    blob = convert(path, tmp_path / "w.blob")
+    bs = BlobStore(blob)
+    emb, ids = bs.get_node(2, 1)
+    # shrink the node in place
+    new_emb, new_ids = emb[:3], np.asarray(ids[:3], np.int64)
+    bs.write_node(2, 1, new_emb, new_ids)
+    e2, i2 = bs.get_node(2, 1)
+    np.testing.assert_array_equal(e2, new_emb.astype(np.float16).astype(np.float32))
+    np.testing.assert_array_equal(i2, new_ids)
+    # a reopened store sees the persisted header update
+    e3, i3 = BlobStore(blob).get_node(2, 1)
+    np.testing.assert_array_equal(i3, new_ids)
+    # data larger than the fixed block must be rejected
+    big = np.zeros((bs.block_bytes // bs._row_bytes + 1, bs.dim), np.float32)
+    with pytest.raises(ValueError):
+        bs.write_node(2, 1, big, np.zeros(len(big), np.int64))
+
+
+def test_prefetch_store_hits_and_close(built):
+    _, _, blob = built
+    ps = open_store(blob, prefetch=True)
+    keys = [(2, 0), (2, 1), (2, 2)]
+    ps.prefetch(keys)
+    direct = open_store(blob)
+    for key in keys:
+        e, i = ps.get_node(*key)
+        e1, i1 = direct.get_node(*key)
+        np.testing.assert_array_equal(e, e1)
+        np.testing.assert_array_equal(i, i1)
+    assert ps.prefetch_issued == 3 and ps.prefetch_hits == 3
+    ps.close()
+    ps.prefetch([(2, 3)])  # no-op after close, must not raise
+
+
+def test_save_requires_fstore_backend(built):
+    data, _, blob = built
+    bidx = open_index(blob, mode="file", backend="blob")
+    rs = bidx.search(data[1], k=5, b=8)
+    with pytest.raises(NotImplementedError):
+        rs.query.save()
+    with pytest.raises(NotImplementedError):
+        bidx.load_query("q_000000")
+
+
+def test_node_rows_matches_data_without_reading_it(built):
+    _, path, blob = built
+    fs, bs = open_store(path), open_store(blob)
+    keys = [(0, 0), (1, 0), (2, 0), (2, 5)]
+    expect = [len(fs.get_node(*k)[1]) for k in keys]
+    assert fs.node_rows(keys) == expect
+    before = bs.io.snapshot()
+    assert bs.node_rows(keys) == expect
+    assert bs.io.delta(before).reads_issued == 0  # header-only, no I/O
+
+
+def test_prefetch_on_node_sink_releases_futures(built):
+    """With an on_node sink, completed prefetches flow to the caller (e.g.
+    the byte-budgeted NodeCache) and do NOT pin buffers in the store."""
+    _, _, blob = built
+    ps = open_store(blob, prefetch=True)
+    got = {}
+    ps.prefetch([(2, j) for j in range(4)], on_node=lambda k, v: got.__setitem__(k, v))
+    ps.drain()
+    # done-callbacks fire just after waiters wake; give them a beat
+    import time
+
+    for _ in range(200):
+        if len(got) == 4 and len(ps._futures) == 0:
+            break
+        time.sleep(0.005)
+    assert set(got) == {(2, j) for j in range(4)}
+    assert len(ps._futures) == 0, "sunk futures must not linger in-flight"
+    direct = open_store(blob)
+    for (lv, nd), (e, i) in got.items():
+        e1, i1 = direct.get_node(lv, nd)
+        np.testing.assert_array_equal(e, e1)
+        np.testing.assert_array_equal(i, i1)
+
+
+def test_prefetch_drain_settles_io(built):
+    _, _, blob = built
+    ps = open_store(blob, prefetch=True)
+    ps.prefetch([(2, j) for j in range(6)])
+    ps.drain()
+    settled = ps.io.snapshot()
+    assert settled.reads_issued >= 1
+    # after drain, no background reads are still trickling in
+    assert ps.io.delta(settled).reads_issued == 0
+
+
+def test_build_returns_protocol_store(built):
+    _, path, _ = built
+    store = open_store(path)
+    # root is node (0, 0); its ids enumerate the level-1 nodes
+    emb, ids = store.get_node(0, 0)
+    assert emb.dtype == np.float32
+    info = store.read_attrs(layout.INFO)
+    assert len(ids) == int(info["nodes_per_level"][0])
