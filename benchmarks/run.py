@@ -5,10 +5,20 @@
 Emits, per the harness contract, ``name,us_per_call,derived`` CSV lines in
 the SUMMARY section (latencies from the tables; derived = context such as
 tasks solved or speedup), after printing each table in full.
+
+With ``--bench-json PATH`` also writes a machine-readable summary: every
+scenario's us_per_call plus, where measured, its cold-pass IOStats — so
+the perf trajectory is tracked across PRs (the committed
+``BENCH_search.json`` comes from the CI bench-smoke invocation,
+``--fast --backend all --bench-json BENCH_search.json``).
+The search-engine section enforces bit-identical parity
+between the legacy and vectorized traversal engines and fails the run on
+any mismatch (CI's bench-smoke gate).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -37,9 +47,26 @@ def main() -> None:
         "comparison section always reports every backend ('all' repeats "
         "tables 2/4 per backend)",
     )
+    ap.add_argument(
+        "--bench-json",
+        default="",
+        help="where to write the machine-readable per-scenario summary "
+        "(us_per_call + IOStats).  Off by default so ad-hoc runs don't "
+        "clobber the committed artifact; the committed BENCH_search.json "
+        "is regenerated with '--fast --backend all --bench-json "
+        "BENCH_search.json' (the CI bench-smoke invocation)",
+    )
     args = ap.parse_args()
 
-    from . import backends, indexes, roofline, table2_single_query, table3_tasks, table4_incremental
+    from . import (
+        backends,
+        indexes,
+        roofline,
+        search_engine,
+        table2_single_query,
+        table3_tasks,
+        table4_incremental,
+    )
 
     n_items = args.n_items or (6000 if args.fast else 20000)
     runs = 2 if args.fast else 4
@@ -76,29 +103,84 @@ def main() -> None:
         tb,
     )
 
+    # parity-enforcing: raises on any legacy-vs-vectorized mismatch
+    se = search_engine.run(runs=runs)
+    _print_table(
+        "Search-engine comparison — legacy vs vectorized single-query vs "
+        "batch-dedup traversal (bit-identical parity enforced)",
+        se,
+    )
+
     print("\n=== Roofline (single-pod 16x16, from dry-run artifacts) ===")
     roofline.print_table("single")
     print("\n=== Roofline (multi-pod 2x16x16) ===")
     roofline.print_table("multi")
 
     # ----------------------------------------------------------- summary CSV
+    scenarios: list[dict] = []
+
+    def emit(name: str, us: float, derived: str, io: dict | None = None) -> None:
+        print(f"{name},{us:.1f},{derived}")
+        row = {"name": name, "us_per_call": round(float(us), 1), "derived": derived}
+        if io is not None:
+            row["io"] = io
+        scenarios.append(row)
+
     print("\nname,us_per_call,derived")
     for r in t2:
-        print(f"table2/{r['index']}/mem,{r['lat_mem_s']*1e6:.1f},disk_us={r['lat_disk_s']*1e6:.1f}")
+        emit(
+            f"table2/{r['index']}/mem",
+            r["lat_mem_s"] * 1e6,
+            f"disk_us={r['lat_disk_s']*1e6:.1f}",
+        )
     for r in t3:
-        print(f"table3/{r['index']},0,tasks={r['tasks']};recall={r['recall@100']}")
+        emit(f"table3/{r['index']}", 0, f"tasks={r['tasks']};recall={r['recall@100']}")
     ecp_wl = next(r for r in t4 if r["index"].startswith("eCP-FS"))["workload_s"]
     for r in t4:
         sp = r["workload_s"] / ecp_wl if ecp_wl else 0.0
-        print(
-            f"table4/{r['index']},{r['lat_mem_s']*1e6:.1f},workload_s={r['workload_s']};vs_ecp={sp:.1f}x"
+        emit(
+            f"table4/{r['index']}",
+            r["lat_mem_s"] * 1e6,
+            f"workload_s={r['workload_s']};vs_ecp={sp:.1f}x",
         )
     for r in tb:
-        print(
-            f"backend/{r['backend']},{r['lat_cold_s']*1e6:.1f},"
+        emit(
+            f"backend/{r['backend']}",
+            r["lat_cold_s"] * 1e6,
             f"warm_us={r['lat_warm_s']*1e6:.1f};bytes={r['bytes_read']};"
-            f"files={r['files_opened']};reads={r['reads_issued']}"
+            f"files={r['files_opened']};reads={r['reads_issued']}",
+            io={
+                "bytes_read": r["bytes_read"],
+                "files_opened": r["files_opened"],
+                "reads_issued": r["reads_issued"],
+            },
         )
+    for r in se:
+        emit(
+            f"search-engine/{r['scenario']}",
+            r["us_per_call"],
+            f"cold_us={r['cold_us_per_call']};vs_legacy={r['speedup_vs_legacy']}x;"
+            f"rounds={r['rounds']};dedup_hits={r['dedup_hits']}",
+            io={
+                "bytes_read": r["bytes_read"],
+                "files_opened": r["files_opened"],
+                "reads_issued": r["reads_issued"],
+            },
+        )
+
+    if args.bench_json:
+        bench = {
+            "schema": 1,
+            "fast": bool(args.fast),
+            "backend": args.backend,
+            "n_items": n_items,
+            "parity": "ok",  # search_engine.run raised otherwise
+            "scenarios": scenarios,
+        }
+        with open(args.bench_json, "w") as f:
+            json.dump(bench, f, indent=2, sort_keys=False)
+            f.write("\n")
+        print(f"\n[bench] wrote {args.bench_json} ({len(scenarios)} scenarios)")
     sys.stdout.flush()
 
 

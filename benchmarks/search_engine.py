@@ -1,0 +1,146 @@
+"""Traversal-engine comparison — how much of eCP-FS's file-mode latency
+was interpreter overhead rather than file I/O.
+
+Same index, same queries, three execution paths per storage backend:
+
+  * legacy-single   the reference engine (tuple heap + list-sort I), one
+                    query at a time — the paper's original measured path
+  * flat-single     the vectorized engine (flat-array frontier, candidate
+                    buffer, cached node norms), one query at a time
+  * flat-batch      the vectorized engine in round-based batch mode: all
+                    B rows advance in lockstep, node demands are deduped
+                    across rows and fetched with one coalescing
+                    ``get_nodes`` per round
+
+Every path must return bit-identical (dists, ids) — the run *asserts*
+this (CI uses it as the parity gate) and additionally asserts that on the
+blob backend the batch path issues fewer cold ``reads_issued`` than B
+independent single-query searches (the cross-query dedup guarantee).
+
+Reported per scenario: warm/cold us_per_call, cold-pass IOStats, and for
+the batch path the engine's round / dedup counters.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def _fresh(path: str, backend: str, **kw):
+    from repro.core import open_index
+
+    return open_index(path, mode="file", backend=backend, **kw)
+
+
+def compare(
+    *,
+    ecp_path: str,
+    blob_path: str,
+    queries: np.ndarray,
+    k: int = 100,
+    b: int = 16,
+    runs: int = 2,
+    backends=("fstore", "blob"),
+) -> list[dict]:
+    """One row per (backend, engine path); raises AssertionError on any
+    parity mismatch or on a batch dedup regression (blob)."""
+    Q = np.asarray(queries, np.float32)
+    B = len(Q)
+    rows = []
+    for backend in backends:
+        path = ecp_path if backend == "fstore" else blob_path
+
+        def single_loop(idx):
+            return [idx.search(q, k, b=b) for q in Q]
+
+        scenarios = [
+            ("legacy-single", {"engine": "legacy"}, single_loop),
+            ("flat-single", {}, single_loop),
+            ("flat-batch", {}, lambda idx: idx.search(Q, k, b=b)),
+        ]
+        results = {}
+        perf = {}
+        for name, kw, drive in scenarios:
+            idx = _fresh(path, backend, **kw)
+            try:
+                io0 = idx.store.io.snapshot()
+                t0 = time.perf_counter()
+                out = drive(idx)
+                cold_s = time.perf_counter() - t0
+                cold_io = idx.store.io.delta(io0)
+                if isinstance(out, list):
+                    d = np.stack([r.dists for r in out])
+                    i = np.stack([r.ids for r in out])
+                    batch_stats = None
+                else:
+                    d, i = out.dists, out.ids
+                    batch_stats = out.query.batch_stats
+                results[name] = (d, i)
+                warm = []
+                for _ in range(runs):
+                    t0 = time.perf_counter()
+                    drive(idx)
+                    warm.append(time.perf_counter() - t0)
+                perf[name] = (cold_s, float(np.mean(warm)), cold_io, batch_stats)
+            finally:
+                idx.close()
+
+        # ---- parity gate: all three paths bit-identical ----------------
+        ref_d, ref_i = results["legacy-single"]
+        for name in ("flat-single", "flat-batch"):
+            d, i = results[name]
+            np.testing.assert_array_equal(
+                i, ref_i, err_msg=f"{backend}/{name}: ids diverge from legacy"
+            )
+            np.testing.assert_array_equal(
+                d, ref_d, err_msg=f"{backend}/{name}: dists diverge from legacy"
+            )
+        # ---- dedup gate: batch must not read more than B singles -------
+        if backend == "blob":
+            single_reads = perf["flat-single"][2].reads_issued
+            batch_reads = perf["flat-batch"][2].reads_issued
+            assert batch_reads < single_reads, (
+                f"batch dedup regression on blob: batch issued {batch_reads} "
+                f"cold reads vs {single_reads} for {B} independent searches"
+            )
+
+        legacy_warm = perf["legacy-single"][1]
+        for name, _, _ in scenarios:
+            cold_s, warm_s, cold_io, batch_stats = perf[name]
+            row = {
+                "scenario": f"{backend}/{name}",
+                "us_per_call": round(warm_s / B * 1e6, 1),
+                "cold_us_per_call": round(cold_s / B * 1e6, 1),
+                "speedup_vs_legacy": round(legacy_warm / warm_s, 2) if warm_s else 0.0,
+                "bytes_read": cold_io.bytes_read,
+                "files_opened": cold_io.files_opened,
+                "reads_issued": cold_io.reads_issued,
+                "rounds": batch_stats.rounds if batch_stats else 0,
+                "dedup_hits": batch_stats.dedup_hits if batch_stats else 0,
+            }
+            rows.append(row)
+    return rows
+
+
+def run(*, runs: int = 2, backends=("fstore", "blob")) -> list[dict]:
+    """The run.py scenario over the shared bench suite: B = all task
+    queries (B >= 16), matched k/b with the paper tables."""
+    from .indexes import get_suite
+
+    s = get_suite()
+    queries = np.stack([t.queries[-1] for t in s.ds.tasks])
+    return compare(
+        ecp_path=s.ecp_path,
+        blob_path=s.ecp_blob_path,
+        queries=queries,
+        k=s.params["k"],
+        b=s.params["b"]["eCP-FS"],
+        runs=runs,
+        backends=backends,
+    )
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

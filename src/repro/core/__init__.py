@@ -35,15 +35,18 @@ from .api import (
 )
 from .build import ECPBuildConfig, build_index
 from .batched import BatchedQuery, BatchedQueryState, BatchedSearcher
+from .frontier import CandidateBuffer, Frontier
 from .fstore import FStore
 from .layout import IndexInfo, derive_shape
+from .legacy import LegacyQueryState
 from .packed import PackedIndex, load_packed
-from .search import ECPIndex, ECPQuery, QueryState
+from .search import ECPIndex, ECPQuery, QueryState, make_kernel_scorer
 from .store import (
     AsyncPrefetchStore,
     BlobStore,
     FStoreBackend,
     IOStats,
+    NodeNormCache,
     Store,
     convert,
     open_store,
@@ -79,4 +82,9 @@ __all__ = [
     "ECPIndex",
     "ECPQuery",
     "QueryState",
+    "LegacyQueryState",
+    "Frontier",
+    "CandidateBuffer",
+    "NodeNormCache",
+    "make_kernel_scorer",
 ]

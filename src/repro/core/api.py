@@ -69,12 +69,20 @@ class QueryClosedError(RuntimeError):
 
 @dataclass
 class SearchStats:
-    node_loads: int = 0            # disk reads (cache misses served from the store)
+    node_loads: int = 0            # disk reads (cache misses served from the store);
+                                   # in batch mode a row counts the misses IT demanded
+                                   # (solo-equivalent) — actual deduped loads live in
+                                   # the handle's batch_stats
     nodes_opened: int = 0          # total nodes popped from T
     leaves_opened: int = 0
     distance_calcs: int = 0        # individual distance computations
     increments: int = 0            # b-doublings
-    io: IOStats = field(default_factory=IOStats)  # bytes/files/reads at the store
+    rounds: int = 0                # lockstep batch rounds participated in (batch mode)
+    dedup_hits: int = 0            # node demands served by a load another query in the
+                                   # same round triggered (cross-query fetch dedup)
+    io: IOStats = field(default_factory=IOStats)  # bytes/files/reads at the store;
+                                   # zero per-row in batch mode (coalesced reads have
+                                   # no per-row attribution; see batch_stats.io)
 
 
 # --------------------------------------------------------------------- cache

@@ -19,8 +19,16 @@ def _check(metric: str) -> None:
 
 
 # ------------------------------------------------------------------ numpy
-def np_distances(q: np.ndarray, c: np.ndarray, metric: str) -> np.ndarray:
-    """q: [B, D] or [D]; c: [N, D] -> [B, N] or [N] float32 distances."""
+def np_distances(
+    q: np.ndarray, c: np.ndarray, metric: str, *, c_sqnorms: np.ndarray | None = None
+) -> np.ndarray:
+    """q: [B, D] or [D]; c: [N, D] -> [B, N] or [N] float32 distances.
+
+    ``c_sqnorms`` optionally supplies precomputed ``(c * c).sum(-1)`` for
+    the l2 metric (per-node norm caching in the search engine).  It MUST
+    equal that exact expression over the float32 ``c`` — then results are
+    bit-identical to the uncached path.  Ignored for other metrics.
+    """
     _check(metric)
     q = np.asarray(q, np.float32)
     c = np.asarray(c, np.float32)
@@ -31,7 +39,7 @@ def np_distances(q: np.ndarray, c: np.ndarray, metric: str) -> np.ndarray:
         d = -(q @ c.T)
     elif metric == "l2":
         qn = (q * q).sum(-1, keepdims=True)
-        cn = (c * c).sum(-1)[None, :]
+        cn = ((c * c).sum(-1) if c_sqnorms is None else np.asarray(c_sqnorms, np.float32))[None, :]
         d = qn + cn - 2.0 * (q @ c.T)
     else:  # cosine
         qn = q / np.maximum(np.linalg.norm(q, axis=-1, keepdims=True), 1e-12)

@@ -1,0 +1,160 @@
+"""Reference (pre-vectorization) traversal engine — Python-object hot path.
+
+This is the paper's Algorithms 1-3 exactly as first implemented: a
+``heapq`` of ``(d, tie, is_leaf, level, node)`` tuples for T, an unbounded
+``[(d, item_id)]`` list for I re-sorted on every increment, and per-item
+Python conversions throughout.  The vectorized engine (core/frontier.py +
+core/search.py) replaces this as the default, but the reference stays in
+the tree for two jobs:
+
+  * **parity oracle** — the vectorized engine must return bit-identical
+    ``(dists, ids)``; tests and the ``search-engine`` benchmark scenario
+    compare against this implementation (``ECPIndex(engine="legacy")``).
+  * **measured baseline** — the benchmark's "legacy-equivalent" row
+    quantifies how much of eCP-FS's file-mode latency was interpreter
+    overhead rather than file I/O (the paper's central question).
+
+Functions take the ``ECPIndex`` as an explicit parameter (node IO, cache
+and prefetch plumbing stay shared); only the per-query state and the
+traversal inner loop live here.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .api import SearchStats
+from .distances import np_distances
+
+__all__ = ["LegacyQueryState"]
+
+
+@dataclass
+class LegacyQueryState:
+    """Persistent per-query state (paper §4.3): Q.q, Q.T, Q.I."""
+
+    q: np.ndarray
+    b: int
+    mx_inc: int
+    exclude: set = field(default_factory=set)
+    T: list = field(default_factory=list)   # heap of (d, tie, is_leaf, level, node)
+    I: list = field(default_factory=list)   # sorted [(d, item_id)]
+    started: bool = False
+    increments: int = 0
+    emitted: int = 0
+    stats: SearchStats = field(default_factory=SearchStats)
+    _tie: "itertools.count" = field(default_factory=itertools.count)
+
+
+# ----------------------------------------------------------- Algorithm 2
+def next_items(index, qs: LegacyQueryState, k: int) -> tuple[list, list]:
+    cnt = min(len(qs.I), k)
+    if cnt < k and qs.T:
+        incremental_search(index, qs, k)
+        cnt = min(len(qs.I), k)
+    out, qs.I = qs.I[:cnt], qs.I[cnt:]
+    qs.emitted += len(out)
+    return [x[0] for x in out], [x[1] for x in out]
+
+
+# ----------------------------------------------------------- Algorithm 3
+def incremental_search(index, qs: LegacyQueryState, k: int) -> None:
+    info = index.info
+    metric = info.metric
+    leaf_cnt = 0
+    loads_before = index.load_node_count
+    io_before = index.store.io.snapshot()
+
+    if not qs.started:
+        qs.started = True
+        d = np_distances(qs.q, index.root_emb, metric)
+        qs.stats.distance_calcs += len(index.root_emb)
+        is_leaf = 1 if info.levels == 1 else 0
+        for c, dist in zip(index.root_ids, d):
+            heapq.heappush(qs.T, (float(dist), next(qs._tie), is_leaf, 1, int(c)))
+
+    while qs.T:
+        dist, _, is_leaf, level, node = heapq.heappop(qs.T)
+        qs.stats.nodes_opened += 1
+        emb, ids = index.get_node(level, node)
+        if len(ids) == 0:
+            continue
+        d = np_distances(qs.q, emb, metric)
+        qs.stats.distance_calcs += len(ids)
+        if is_leaf:
+            qs.stats.leaves_opened += 1
+            for c, cd in zip(ids, d):
+                c = int(c)
+                if c not in qs.exclude:
+                    qs.I.append((float(cd), c))
+            leaf_cnt += 1
+        else:
+            next_is_leaf = 1 if (level + 1) == info.levels else 0
+            for c, cd in zip(ids, d):
+                heapq.heappush(
+                    qs.T, (float(cd), next(qs._tie), next_is_leaf, level + 1, int(c))
+                )
+            if index._store_prefetch is not None:
+                order = np.argsort(d)[: index.prefetch_fanout]
+                want = [
+                    (level + 1, int(ids[j]))
+                    for j in order
+                    if not index.cache.contains((index._ns, level + 1, int(ids[j])))
+                ]
+                if want:
+                    index._store_prefetch(want, on_node=index._on_prefetched)
+        if is_leaf and leaf_cnt >= qs.b:
+            if len(qs.I) >= k:
+                break
+            if qs.mx_inc == -1 or qs.increments < qs.mx_inc:
+                qs.increments += 1
+                qs.stats.increments += 1
+                qs.b *= 2
+            else:
+                break
+    qs.stats.node_loads += index.load_node_count - loads_before
+    qs.stats.io.add(index.store.io.delta(io_before))
+    qs.I.sort(key=lambda t: t[0])
+
+
+# -------------------------------------------------------------- persistence
+def export_state(qs: LegacyQueryState) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(item_dists, item_ids, frontier_rows) in the §6.2 on-disk schema."""
+    if qs.I:
+        d = np.asarray([x[0] for x in qs.I], np.float32)
+        i = np.asarray([x[1] for x in qs.I], np.int64)
+    else:
+        d = np.zeros((0,), np.float32)
+        i = np.zeros((0,), np.int64)
+    if qs.T:
+        t = np.asarray([(e[0], e[2], e[3], e[4]) for e in qs.T], np.float64)
+    else:
+        t = np.zeros((0, 4), np.float64)
+    return d, i, t
+
+
+def load_state(
+    q: np.ndarray,
+    attrs: dict,
+    item_d: np.ndarray,
+    item_i: np.ndarray,
+    frontier_rows: np.ndarray,
+) -> LegacyQueryState:
+    qs = LegacyQueryState(
+        q=q,
+        b=int(attrs["b"]),
+        mx_inc=int(attrs["mx_inc"]),
+        exclude=set(attrs.get("exclude", [])),
+    )
+    qs.increments = int(attrs["increments"])
+    qs.emitted = int(attrs["emitted"])
+    qs.started = bool(attrs["started"])
+    qs.I = [(float(x), int(y)) for x, y in zip(item_d, item_i)]
+    for row in frontier_rows:
+        heapq.heappush(
+            qs.T, (float(row[0]), next(qs._tie), int(row[1]), int(row[2]), int(row[3]))
+        )
+    return qs

@@ -1,4 +1,5 @@
-"""eCP-FS retrieval: lazy node loading, LRU cache, incremental search.
+"""eCP-FS retrieval: lazy node loading, LRU cache, vectorized incremental
+search.
 
 Faithful implementation of the paper's Algorithms 1-3 behind the unified
 ``Searcher`` API (core/api.py):
@@ -8,15 +9,40 @@ Faithful implementation of the paper's Algorithms 1-3 behind the unified
     in a ``ResultSet`` whose ``.query`` handle owns the state.
   * ``ECPQuery.next(k)``             — Algorithm 2 (GetNextKItems): pop k
     items from I, resuming the tree search when I underflows.
-  * ``_incremental_search``          — Algorithm 3: single cross-level
+  * ``_increment``                   — Algorithm 3: single cross-level
     priority queue T: always open the globally most promising node
     regardless of level; leaves append scanned items to I; after b leaves,
     either return (|I| >= k) or double b (bounded by mx_inc) and continue.
 
+The traversal engine is vectorized (the file-mode hot path used to be
+interpreter overhead, not file I/O):
+
+  * T is a flat-array ``Frontier`` and I a ``CandidateBuffer``
+    (core/frontier.py) — batch pushes/merges instead of per-item tuples,
+    with pop order bit-identical to the old tuple heap.
+  * Batch queries ``[B, D]`` advance all rows in lockstep **rounds**: each
+    round collects every row's next node demand, dedupes them, and issues
+    ONE cache-aware ``get_nodes`` — a node needed by several queries is
+    read once (and a blob backend coalesces adjacent blocks).  Per-row
+    ranking semantics are untouched, so results equal B independent
+    searches bit-for-bit.
+  * Leaf scans route through a ``scorer`` hook (default: ``np_distances``
+    with per-node cached squared norms, so l2 stops recomputing
+    ``(c*c).sum(-1)`` on every visit; ``make_kernel_scorer`` swaps in the
+    Pallas ``distance_topk`` kernel for large leaf blocks).
+  * ``batch_matrix=True`` additionally scores a node's co-demanding rows
+    as one dense ``[B', N]`` distance matrix.  BLAS GEMM results are not
+    bit-identical across batch shapes, so this throughput mode is opt-in;
+    the default scores each row through the exact same ``[1, D]`` call the
+    reference engine makes.
+
+``ECPIndex(engine="legacy")`` selects the original Python-object engine
+(core/legacy.py) — the parity oracle and benchmark baseline.
+
 Node data is loaded on first access and kept in a bounded LRU cache
 (paper §4.2) which may be private or shared across indexes
-(``MultiIndexSession``); prefetching up to a level runs on background
-threads.
+(``MultiIndexSession``); prefetching up to a level runs on a reusable
+background pool.
 
 Two deliberate fixes of apparent pseudocode typos (semantics follow the
 paper's prose): (1) Algorithm 2 line 4 checks ``cnt = 0`` but the text says
@@ -27,64 +53,110 @@ mx_inc == -1 meaning unbounded).
 """
 from __future__ import annotations
 
-import heapq
-import itertools
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 
 import numpy as np
 
-from . import layout
+from . import layout, legacy
 from .api import NodeCache, Query, ResultSet, SearchStats, pack_rows
 from .distances import np_distances
-from .store import Store, open_store
+from .frontier import CandidateBuffer, Frontier
+from .store import NodeNormCache, Store, open_store
 
-__all__ = ["ECPIndex", "ECPQuery", "QueryState", "NodeCache", "SearchStats"]
+__all__ = [
+    "ECPIndex",
+    "ECPQuery",
+    "QueryState",
+    "NodeCache",
+    "SearchStats",
+    "make_kernel_scorer",
+]
 
 # when expanding an internal node, asynchronously prefetch this many of its
 # nearest not-yet-resident children (only with a prefetch-capable store)
 PREFETCH_FANOUT = 8
 
+ENGINES = ("flat", "legacy")
+
 
 @dataclass
 class QueryState:
-    """Persistent per-query state (paper §4.3): Q.q, Q.T, Q.I."""
+    """Persistent per-query state (paper §4.3): Q.q, Q.T, Q.I — T/I as the
+    flat-array structures of core/frontier.py."""
 
     q: np.ndarray
     b: int
     mx_inc: int
     exclude: set = field(default_factory=set)
-    T: list = field(default_factory=list)              # heap of (d, tie, is_leaf, level, node)
-    I: list = field(default_factory=list)              # sorted [(d, item_id)]
+    T: Frontier = field(default_factory=Frontier)
+    I: CandidateBuffer = field(default_factory=CandidateBuffer)
     started: bool = False
     increments: int = 0
     emitted: int = 0
     stats: SearchStats = field(default_factory=SearchStats)
-    _tie: "itertools.count" = field(default_factory=itertools.count)
+    _excl_arr: np.ndarray | None = None
+
+    def excl(self) -> np.ndarray | None:
+        """The exclude set as a cached int64 array (np.isin operand).
+        The cache lives for one increment (the engine invalidates it on
+        entry), so between-call mutations of ``exclude`` are honored just
+        like the per-item membership test of the legacy engine."""
+        if self._excl_arr is None and self.exclude:
+            self._excl_arr = np.fromiter(self.exclude, np.int64, len(self.exclude))
+        return self._excl_arr
+
+
+def make_kernel_scorer(min_rows: int = 256, impl: str = "auto"):
+    """A leaf ``scorer`` that runs large leaf blocks through the fused
+    Pallas ``distance_topk`` kernel (kernels/distance_topk) and falls back
+    to numpy below ``min_rows``.
+
+    Full-N selection (k == N) recovers every item's distance, scattered
+    back to storage order, so the traversal's candidate semantics are
+    unchanged.  Device math is NOT guaranteed bit-identical to the numpy
+    path across backends — this is an opt-in throughput mode, excluded
+    from the parity suite.
+    """
+
+    def scorer(q, emb, metric, sqnorms=None):
+        n = emb.shape[0]
+        if n < min_rows:
+            return np_distances(q, emb, metric, c_sqnorms=sqnorms)
+        from repro.kernels.distance_topk import distance_topk
+
+        d, idx = distance_topk(np.asarray(q, np.float32)[None, :], emb, n, metric, impl=impl)
+        out = np.empty(n, np.float32)
+        out[np.asarray(idx[0])] = np.asarray(d[0], np.float32)
+        return out
+
+    return scorer
 
 
 class ECPQuery(Query):
     """Handle over one ``ECPIndex.search`` call (single query or a batch).
 
-    Owns one ``QueryState`` per query row; ``next(k)`` resumes the
-    incremental search, ``save()`` persists the frontier into the index's
-    own file structure (paper §6.2), ``close()`` frees the states — any
-    later call raises ``QueryClosedError`` (no silent ``None`` holes).
+    Owns one per-row state; ``next(k)`` resumes the incremental search
+    (batch handles resume underflowing rows together, through the same
+    round-based dedup engine), ``save()`` persists the frontier into the
+    index's own file structure (paper §6.2), ``close()`` frees the states —
+    any later call raises ``QueryClosedError`` (no silent ``None`` holes).
     """
 
-    def __init__(self, index: "ECPIndex", states: list[QueryState], *, single: bool):
+    def __init__(self, index: "ECPIndex", states: list, *, single: bool, batch_stats: SearchStats | None = None):
         self._index = index
         self._states = states
         self._single = single
+        self._batch_stats = batch_stats
 
     # ------------------------------------------------------------- access
     @property
-    def states(self) -> list[QueryState]:
+    def states(self) -> list:
         self._ensure_open()
         return self._states
 
     @property
-    def state(self) -> QueryState:
+    def state(self):
         """The sole state of a single-query handle."""
         self._ensure_open()
         if len(self._states) != 1:
@@ -99,6 +171,15 @@ class ECPQuery(Query):
         return [s.stats for s in self._states]
 
     @property
+    def batch_stats(self) -> SearchStats | None:
+        """Aggregate counters of the round-based batch engine (None for
+        single-query and legacy handles): ``rounds``, actual deduped
+        ``node_loads``, ``dedup_hits`` (loads saved by cross-query
+        sharing), and the store ``io`` delta of the whole batch."""
+        self._ensure_open()
+        return self._batch_stats
+
+    @property
     def b(self):
         self._ensure_open()
         if self._single:
@@ -108,7 +189,7 @@ class ECPQuery(Query):
     # -------------------------------------------------------- continuation
     def next(self, k: int) -> ResultSet:
         self._ensure_open()
-        rows = [self._index._next_items(qs, k) for qs in self._states]
+        rows = self._index._next_rows(self._states, k, self._batch_stats)
         return self._index._result(rows, self._states, k, self._single, self)
 
     # -------------------------------------------------------- persistence
@@ -128,18 +209,9 @@ class ECPQuery(Query):
             rg = f"{g}/row_{r:06d}"
             store.create_group(rg)
             store.write_array(f"{rg}/query", qs.q)
-            if qs.I:
-                d = np.asarray([x[0] for x in qs.I], np.float32)
-                i = np.asarray([x[1] for x in qs.I], np.int64)
-            else:
-                d = np.zeros((0,), np.float32)
-                i = np.zeros((0,), np.int64)
+            d, i, t = self._index._export_state(qs)
             store.write_array(f"{rg}/item_dists", d)
             store.write_array(f"{rg}/item_ids", i)
-            if qs.T:
-                t = np.asarray([(e[0], e[2], e[3], e[4]) for e in qs.T], np.float64)
-            else:
-                t = np.zeros((0, 4), np.float64)
             store.write_array(f"{rg}/frontier", t)
             store.write_attrs(
                 rg,
@@ -161,7 +233,15 @@ class ECPQuery(Query):
 
 class ECPIndex:
     """Open an eCP-FS file structure for retrieval (the ``Searcher`` for
-    file mode: bounded memory, true incremental continuation)."""
+    file mode: bounded memory, true incremental continuation).
+
+    ``engine`` picks the traversal implementation: ``"flat"`` (default —
+    flat-array frontier, batched rounds, scorer hook) or ``"legacy"`` (the
+    original tuple-heap engine, kept as parity oracle and benchmark
+    baseline).  Both return bit-identical results.
+    """
+
+    prefetch_fanout = PREFETCH_FANOUT
 
     def __init__(
         self,
@@ -174,7 +254,14 @@ class ECPIndex:
         cache_max_nodes: int | None = None,
         cache_max_bytes: int | None = None,
         prefetch_workers: int = 4,
+        engine: str = "flat",
+        scorer=None,
+        batch_matrix: bool = False,
+        norm_cache_entries: int = 16384,
     ):
+        if engine not in ENGINES:
+            raise ValueError(f"unknown engine: {engine!r} ({'|'.join(ENGINES)})")
+        self._owns_store = not isinstance(path, Store)
         self.store = (
             path
             if isinstance(path, Store)
@@ -190,9 +277,17 @@ class ECPIndex:
         # namespace tag keeps keys distinct inside a shared session cache
         self._ns = namespace if namespace is not None else str(self.store.path)
         self._prefetch_workers = prefetch_workers
+        self._pool: ThreadPoolExecutor | None = None  # reusable prefetch pool
         # store-level async prefetch hook (AsyncPrefetchStore); None otherwise
         self._store_prefetch = getattr(self.store, "prefetch", None)
         self.load_node_count = 0
+        self.engine = engine
+        self._scorer = scorer
+        self._batch_matrix = bool(batch_matrix)
+        # per-node squared-norm cache: l2 scoring reuses (c*c).sum(-1)
+        self._norms = (
+            NodeNormCache(norm_cache_entries) if self.info.metric == "l2" else None
+        )
 
     @property
     def state_store(self):
@@ -243,7 +338,8 @@ class ECPIndex:
         return out
 
     def prefetch(self, up_to_level: int) -> None:
-        """Background-load all nodes at levels 1..up_to_level (paper §4.2)."""
+        """Background-load all nodes at levels 1..up_to_level (paper §4.2)
+        on the index's reusable prefetch pool."""
         keys = [
             (lv, j)
             for lv in range(1, min(up_to_level, self.info.levels) + 1)
@@ -251,8 +347,58 @@ class ECPIndex:
         ]
         chunk = 64
         batches = [keys[i : i + chunk] for i in range(0, len(keys), chunk)]
-        with ThreadPoolExecutor(max_workers=self._prefetch_workers) as ex:
-            list(ex.map(self.get_nodes, batches))
+        list(self._prefetch_pool().map(self.get_nodes, batches))
+
+    def _prefetch_pool(self) -> ThreadPoolExecutor:
+        """One executor per index, created lazily and reused across
+        ``prefetch`` calls (no per-call pool spin-up/teardown)."""
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(
+                max_workers=self._prefetch_workers, thread_name_prefix="ecp-prefetch"
+            )
+        return self._pool
+
+    def close(self) -> None:
+        """Shut down the prefetch pool and (if this index opened it) the
+        underlying store.  Idempotent."""
+        pool, self._pool = self._pool, None
+        if pool is not None:
+            pool.shutdown(wait=False)
+        if self._owns_store and self.store is not None:
+            self.store.close()
+
+    # ------------------------------------------------------------ scoring
+    def _sqnorms(self, level: int, node: int, emb: np.ndarray) -> np.ndarray | None:
+        if self._norms is None or len(emb) == 0:
+            return None
+        return self._norms.get(level, node, emb)
+
+    def _score_row(self, q: np.ndarray, emb: np.ndarray, sq, *, leaf: bool) -> np.ndarray:
+        """One row's distances to one node — the exact ``[1, D]`` numpy
+        call of the reference engine unless a custom leaf scorer is set."""
+        if leaf and self._scorer is not None:
+            return self._scorer(q, emb, self.info.metric, sq)
+        return np_distances(q, emb, self.info.metric, c_sqnorms=sq)
+
+    def _stage_leaf(self, qs: QueryState, d: np.ndarray, ids: np.ndarray) -> None:
+        if qs.exclude:
+            keep = ~np.isin(ids, qs.excl())
+            if not keep.all():
+                d, ids = d[keep], ids[keep]
+        qs.I.stage(d, ids)
+
+    def _prefetch_hint(self, child_level: int, ids: np.ndarray, d: np.ndarray) -> list:
+        """The nearest not-yet-resident children of one expansion —
+        ``argpartition`` (no full sort) since prefetch order is moot."""
+        f = min(self.prefetch_fanout, len(d))
+        if f <= 0:
+            return []
+        sel = np.argpartition(d, f - 1)[:f] if f < len(d) else range(len(d))
+        return [
+            (child_level, int(ids[j]))
+            for j in sel
+            if not self.cache.contains((self._ns, child_level, int(ids[j])))
+        ]
 
     # ------------------------------------------------------- Algorithm 1
     def search(
@@ -267,89 +413,104 @@ class ECPIndex:
         """New search over one vector [D] or a batch [B, D].
 
         Returns a ``ResultSet``; ``.query`` is the ``ECPQuery`` handle for
-        ``next(k)`` continuation, ``save()``, and ``close()``.
+        ``next(k)`` continuation, ``save()``, and ``close()``.  Batch
+        queries traverse in lockstep rounds with cross-query node-fetch
+        dedup (``.query.batch_stats``).
         """
         b = 8 if b is None else int(b)
         q = np.asarray(q, np.float32)
         single = q.ndim == 1
         Q = q[None, :] if single else q
+        excl = set(exclude) if exclude else set()
+        if self.engine == "legacy":
+            states = [
+                legacy.LegacyQueryState(q=row, b=b, mx_inc=mx_inc, exclude=set(excl))
+                for row in Q
+            ]
+            rows = []
+            for qs in states:
+                legacy.incremental_search(self, qs, k)
+                rows.append(legacy.next_items(self, qs, k))
+            return self._result(rows, states, k, single, ECPQuery(self, states, single=single))
         states = [
-            QueryState(
-                q=row,
-                b=b,
-                mx_inc=mx_inc,
-                exclude=set(exclude) if exclude else set(),
-            )
-            for row in Q
+            QueryState(q=row, b=b, mx_inc=mx_inc, exclude=set(excl)) for row in Q
         ]
-        rows = []
-        for qs in states:
-            self._incremental_search(qs, k)
-            rows.append(self._next_items(qs, k))
-        return self._result(rows, states, k, single, ECPQuery(self, states, single=single))
+        if len(states) == 1:
+            self._increment(states[0], k)
+            rows = [self._next_items(states[0], k)]
+            return self._result(rows, states, k, single, ECPQuery(self, states, single=single))
+        # batch: initial increment, then one resume pass for underflowing
+        # rows — the same two chances Algorithm 1 + 2 give a single query
+        agg = SearchStats()
+        self._batch_increment(states, k, agg)
+        need = [qs for qs in states if len(qs.I) < k and qs.T]
+        if need:
+            self._batch_increment(need, k, agg)
+        rows = [self._next_items(qs, k, resume=False) for qs in states]
+        return self._result(
+            rows, states, k, single, ECPQuery(self, states, single=single, batch_stats=agg)
+        )
 
     def _result(self, rows, states, k, single, query) -> ResultSet:
-        d, i = pack_rows([[x[0] for x in r] for r in rows], [[x[1] for x in r] for r in rows], k)
+        d, i = pack_rows([r[0] for r in rows], [r[1] for r in rows], k)
         if single:
             return ResultSet(dists=d[0], ids=i[0], stats=states[0].stats, query=query)
         return ResultSet(dists=d, ids=i, stats=[s.stats for s in states], query=query)
 
     # ------------------------------------------------------- Algorithm 2
-    def _next_items(self, qs: QueryState, k: int) -> list[tuple[float, int]]:
-        cnt = min(len(qs.I), k)
-        if cnt < k and qs.T:
-            self._incremental_search(qs, k)
-            cnt = min(len(qs.I), k)
-        out, qs.I = qs.I[:cnt], qs.I[cnt:]
-        qs.emitted += len(out)
-        return out
+    def _next_rows(self, states: list, k: int, batch_stats: SearchStats | None = None) -> list:
+        if self.engine == "legacy":
+            return [legacy.next_items(self, qs, k) for qs in states]
+        if len(states) > 1:
+            need = [qs for qs in states if len(qs.I) < k and qs.T]
+            if need:
+                agg = batch_stats if batch_stats is not None else SearchStats()
+                self._batch_increment(need, k, agg)
+            return [self._next_items(qs, k, resume=False) for qs in states]
+        return [self._next_items(qs, k) for qs in states]
+
+    def _next_items(self, qs: QueryState, k: int, *, resume: bool = True):
+        if resume and len(qs.I) < k and qs.T:
+            self._increment(qs, k)
+        d, i = qs.I.take(k)
+        qs.emitted += int(len(d))
+        return d, i
 
     # ------------------------------------------------------- Algorithm 3
-    def _incremental_search(self, qs: QueryState, k: int) -> None:
+    def _start(self, qs: QueryState) -> None:
+        qs.started = True
+        d = np_distances(qs.q, self.root_emb, self.info.metric)
+        qs.stats.distance_calcs += len(self.root_emb)
+        qs.T.push_batch(d, self.root_ids, 1 if self.info.levels == 1 else 0, 1)
+
+    def _increment(self, qs: QueryState, k: int) -> None:
         info = self.info
-        metric = info.metric
         leaf_cnt = 0
         loads_before = self.load_node_count
         io_before = self.store.io.snapshot()
+        qs._excl_arr = None  # re-read the (mutable) exclude set
 
         if not qs.started:
-            qs.started = True
-            d = np_distances(qs.q, self.root_emb, metric)
-            qs.stats.distance_calcs += len(self.root_emb)
-            is_leaf = 1 if info.levels == 1 else 0
-            for c, dist in zip(self.root_ids, d):
-                heapq.heappush(qs.T, (float(dist), next(qs._tie), is_leaf, 1, int(c)))
+            self._start(qs)
 
         while qs.T:
-            dist, _, is_leaf, level, node = heapq.heappop(qs.T)
+            dist, is_leaf, level, node = qs.T.pop()
             qs.stats.nodes_opened += 1
             emb, ids = self.get_node(level, node)
             if len(ids) == 0:
                 continue
-            d = np_distances(qs.q, emb, metric)
+            d = self._score_row(qs.q, emb, self._sqnorms(level, node, emb), leaf=bool(is_leaf))
             qs.stats.distance_calcs += len(ids)
             if is_leaf:
                 qs.stats.leaves_opened += 1
-                for c, cd in zip(ids, d):
-                    c = int(c)
-                    if c not in qs.exclude:
-                        qs.I.append((float(cd), c))
+                self._stage_leaf(qs, d, ids)
                 leaf_cnt += 1
             else:
-                next_is_leaf = 1 if (level + 1) == info.levels else 0
-                for c, cd in zip(ids, d):
-                    heapq.heappush(
-                        qs.T, (float(cd), next(qs._tie), next_is_leaf, level + 1, int(c))
-                    )
+                qs.T.push_batch(d, ids, 1 if (level + 1) == info.levels else 0, level + 1)
                 if self._store_prefetch is not None:
                     # async: start loading the nearest children while the
                     # traversal keeps scoring (frontier prefetch)
-                    order = np.argsort(d)[:PREFETCH_FANOUT]
-                    want = [
-                        (level + 1, int(ids[j]))
-                        for j in order
-                        if not self.cache.contains((self._ns, level + 1, int(ids[j])))
-                    ]
+                    want = self._prefetch_hint(level + 1, ids, d)
                     if want:
                         self._store_prefetch(want, on_node=self._on_prefetched)
             if is_leaf and leaf_cnt >= qs.b:
@@ -366,9 +527,117 @@ class ECPIndex:
         # complete, so per-traversal io can lag slightly; store.drain() gives
         # exact attribution (benchmarks use it between passes)
         qs.stats.io.add(self.store.io.delta(io_before))
-        qs.I.sort(key=lambda t: t[0])
+        qs.I.commit()
+
+    # --------------------------------------------- Algorithm 3, batch mode
+    def _batch_increment(self, states: list, k: int, agg: SearchStats) -> None:
+        """Advance every row's traversal in lockstep rounds.
+
+        Each round pops one node demand per active row, dedupes the
+        demands, and issues a single cache-aware ``get_nodes`` so the blob
+        backend coalesces adjacent blocks and a node wanted by several
+        rows is read once.  Per-row control flow (leaf budget, b-doubling,
+        termination) is exactly Algorithm 3, so results are bit-identical
+        to independent single-query traversals.
+
+        Stats: each row keeps its own nodes_opened / distance_calcs /
+        leaves_opened / increments / rounds, and counts ``node_loads`` as
+        the misses *it* demanded (what a solo run would have read) with
+        ``dedup_hits`` for demands served by another row's load in the
+        same round.  ``agg`` gets the actual deduped loads, total rounds,
+        total dedup savings, and the store io delta of the whole call
+        (per-row ``stats.io`` stays zero in batch mode — coalesced reads
+        have no per-row attribution).
+        """
+        info = self.info
+        io_before = self.store.io.snapshot()
+        for qs in states:
+            qs._excl_arr = None  # re-read the (mutable) exclude set
+            if not qs.started:
+                self._start(qs)
+        leaf_cnt = {id(qs): 0 for qs in states}
+        active = [qs for qs in states if qs.T]
+        while active:
+            agg.rounds += 1
+            pops = []
+            for qs in active:
+                d0, is_leaf, level, node = qs.T.pop()
+                qs.stats.nodes_opened += 1
+                qs.stats.rounds += 1
+                pops.append((qs, is_leaf, level, node))
+            # cross-query fetch dedup: unique (level, node) demands, one
+            # batched read for all of them
+            key_rows: dict[tuple, list] = {}
+            for p in pops:
+                key_rows.setdefault((p[2], p[3]), []).append(p)
+            keys = list(key_rows)
+            missing = {
+                key for key in keys if not self.cache.contains((self._ns, *key))
+            }
+            payloads = dict(zip(keys, self.get_nodes(keys)))
+            for key in keys:
+                demanders = key_rows[key]
+                if key in missing:
+                    agg.node_loads += 1
+                    agg.dedup_hits += len(demanders) - 1
+                    for j, p in enumerate(demanders):
+                        p[0].stats.node_loads += 1
+                        if j:
+                            p[0].stats.dedup_hits += 1
+            hints: dict[tuple, None] = {}
+            done: set[int] = set()
+            for key in keys:
+                emb, ids = payloads[key]
+                if len(ids) == 0:
+                    continue
+                level, node = key
+                demanders = key_rows[key]
+                is_leaf = bool(demanders[0][1])
+                sq = self._sqnorms(level, node, emb)
+                D = None
+                if self._batch_matrix and len(demanders) >= 4 and not (is_leaf and self._scorer is not None):
+                    # opt-in dense [B', N] block (not bit-exact across B');
+                    # only pays off once enough rows co-demand the node
+                    D = np_distances(
+                        np.stack([p[0].q for p in demanders]), emb, info.metric, c_sqnorms=sq
+                    )
+                for r, (qs, _, _, _) in enumerate(demanders):
+                    d = D[r] if D is not None else self._score_row(qs.q, emb, sq, leaf=is_leaf)
+                    qs.stats.distance_calcs += len(ids)
+                    if is_leaf:
+                        qs.stats.leaves_opened += 1
+                        self._stage_leaf(qs, d, ids)
+                        leaf_cnt[id(qs)] += 1
+                        if leaf_cnt[id(qs)] >= qs.b:
+                            if len(qs.I) >= k:
+                                done.add(id(qs))
+                            elif qs.mx_inc == -1 or qs.increments < qs.mx_inc:
+                                qs.increments += 1
+                                qs.stats.increments += 1
+                                qs.b *= 2
+                            else:
+                                done.add(id(qs))
+                    else:
+                        qs.T.push_batch(d, ids, 1 if (level + 1) == info.levels else 0, level + 1)
+                        if self._store_prefetch is not None:
+                            for hk in self._prefetch_hint(level + 1, ids, d):
+                                hints[hk] = None
+            if hints:
+                self._store_prefetch(list(hints), on_node=self._on_prefetched)
+            active = [qs for qs in active if id(qs) not in done and qs.T]
+        agg.io.add(self.store.io.delta(io_before))
+        for qs in states:
+            qs.I.commit()
 
     # -------------------------------------------------------- persistence
+    def _export_state(self, qs) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(item_dists, item_ids, frontier_rows) in the §6.2 schema —
+        identical on-disk layout for both engines."""
+        if isinstance(qs, legacy.LegacyQueryState):
+            return legacy.export_state(qs)
+        d, i = qs.I.export_items()
+        return d, i, qs.T.export_rows()
+
     def load_query(self, name: str, *, group: str = "query_states") -> ECPQuery:
         """Rehydrate a saved ``ECPQuery`` (token from ``ECPQuery.save``)."""
         store = self.state_store
@@ -380,22 +649,26 @@ class ECPIndex:
         for r in range(n_rows):
             rg = f"{g}/row_{r:06d}"
             a = store.read_attrs(rg)
-            qs = QueryState(
-                q=store.read_array(f"{rg}/query"),
-                b=int(a["b"]),
-                mx_inc=int(a["mx_inc"]),
-                exclude=set(a.get("exclude", [])),
-            )
-            qs.increments = int(a["increments"])
-            qs.emitted = int(a["emitted"])
-            qs.started = bool(a["started"])
+            q = store.read_array(f"{rg}/query")
             d = store.read_array(f"{rg}/item_dists")
             i = store.read_array(f"{rg}/item_ids")
-            qs.I = [(float(x), int(y)) for x, y in zip(d, i)]
             t = store.read_array(f"{rg}/frontier")
-            for row in t:
-                heapq.heappush(
-                    qs.T, (float(row[0]), next(qs._tie), int(row[1]), int(row[2]), int(row[3]))
+            if self.engine == "legacy":
+                qs = legacy.load_state(q, a, d, i, t)
+            else:
+                qs = QueryState(
+                    q=q,
+                    b=int(a["b"]),
+                    mx_inc=int(a["mx_inc"]),
+                    exclude=set(a.get("exclude", [])),
                 )
+                qs.increments = int(a["increments"])
+                qs.emitted = int(a["emitted"])
+                qs.started = bool(a["started"])
+                qs.I = CandidateBuffer.from_items(d, i)
+                qs.T = Frontier.from_rows(t)
             states.append(qs)
-        return ECPQuery(self, states, single=single)
+        batch_stats = (
+            SearchStats() if (self.engine == "flat" and len(states) > 1) else None
+        )
+        return ECPQuery(self, states, single=single, batch_stats=batch_stats)

@@ -43,6 +43,8 @@ from __future__ import annotations
 import json
 import os
 import threading
+import weakref
+from collections import OrderedDict
 from concurrent.futures import ThreadPoolExecutor
 from pathlib import Path
 from typing import Protocol, runtime_checkable
@@ -58,6 +60,7 @@ __all__ = [
     "FStoreBackend",
     "BlobStore",
     "AsyncPrefetchStore",
+    "NodeNormCache",
     "open_store",
     "convert",
     "BLOB_MAGIC",
@@ -513,6 +516,56 @@ def convert(
                 f.write(b"\0" * (block_bytes - len(b)))
     os.replace(tmp, dst)
     return dst
+
+
+# --------------------------------------------------------- norm-aware payloads
+class NodeNormCache:
+    """Bounded LRU of per-node squared-norm vectors, keyed ``(level, node)``.
+
+    l2 scoring decomposes as ``|q|^2 + |c|^2 - 2 q.c``; the ``|c|^2`` term
+    depends only on the node's stored embeddings, yet the traversal used
+    to recompute ``(c * c).sum(-1)`` on every visit of every query.  The
+    search engine attaches this cache next to its ``NodeCache`` so a
+    node's norms are computed once per residency and shared across
+    queries (``np_distances(..., c_sqnorms=...)`` — bit-identical by
+    construction since the cached value IS that exact expression).
+
+    Entries are one float32 per node row (~1/(dim) of the node payload);
+    ``max_entries`` bounds residency with LRU eviction.  Each entry holds
+    a weakref to the exact embedding array it was computed from and is
+    only served for that same array — so the norms are never fresher or
+    staler than the node payload the caller is scoring (an in-place
+    ``Store.write_node`` rewrite produces a new array and transparently
+    recomputes, without pinning evicted payloads alive).
+    """
+
+    def __init__(self, max_entries: int = 16384):
+        self.max_entries = max(1, int(max_entries))
+        # key -> (weakref-to-emb, sqnorms)
+        self._d: "OrderedDict[tuple, tuple]" = OrderedDict()
+        self._lock = threading.Lock()
+
+    def get(self, level: int, node: int, emb: np.ndarray) -> np.ndarray:
+        key = (level, node)
+        with self._lock:
+            v = self._d.get(key)
+            if v is not None and v[0]() is emb:
+                self._d.move_to_end(key)
+                return v[1]
+        sq = (emb * emb).sum(-1)
+        with self._lock:
+            self._d[key] = (weakref.ref(emb), sq)
+            self._d.move_to_end(key)
+            while len(self._d) > self.max_entries:
+                self._d.popitem(last=False)
+        return sq
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._d.clear()
 
 
 # ------------------------------------------------------------ async prefetch

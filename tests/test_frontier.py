@@ -1,0 +1,124 @@
+"""Flat-array frontier + candidate buffer: exact ordering parity with the
+tuple-heap / list-sort structures they replace (core/frontier.py)."""
+import heapq
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import CandidateBuffer, Frontier
+
+
+def _ref_push(heap, tie, d, nodes, is_leaf, level):
+    """The old per-child heappush loop (tie assigned in nodes order)."""
+    for nd, dist in zip(nodes, d):
+        heapq.heappush(heap, (float(dist), next(tie), int(is_leaf), int(level), int(nd)))
+
+
+def _drain_equal(f: Frontier, heap: list):
+    while heap:
+        d, _, leaf, level, node = heapq.heappop(heap)
+        assert f.pop() == (d, leaf, level, node)
+    assert len(f) == 0
+    with pytest.raises(IndexError):
+        f.pop()
+
+
+def test_pop_order_matches_tuple_heap_random():
+    rng = np.random.default_rng(0)
+    f = Frontier(capacity=4)  # force several growths
+    heap, tie = [], itertools.count()
+    for _ in range(30):
+        w = int(rng.integers(1, 40))
+        # coarse grid => many exact distance ties across and within batches
+        d = (rng.integers(0, 6, w) / 3.0).astype(np.float32)
+        nodes = rng.integers(0, 1000, w).astype(np.int64)
+        level = int(rng.integers(1, 4))
+        is_leaf = int(rng.integers(0, 2))
+        f.push_batch(d, nodes, is_leaf, level)
+        _ref_push(heap, tie, d, nodes, is_leaf, level)
+        for _ in range(int(rng.integers(0, w + 3))):
+            if not heap:
+                break
+            ref = heapq.heappop(heap)
+            assert f.pop() == (ref[0], ref[2], ref[3], ref[4])
+    _drain_equal(f, heap)
+
+
+def test_tie_break_is_insertion_order():
+    f = Frontier()
+    f.push_batch(np.zeros(3, np.float32), [10, 11, 12], 0, 1)
+    f.push_batch(np.zeros(2, np.float32), [20, 21], 1, 2)
+    got = [f.pop()[3] for _ in range(5)]
+    assert got == [10, 11, 12, 20, 21]
+
+
+def test_peek_does_not_consume():
+    f = Frontier()
+    f.push_batch(np.asarray([3.0, 1.0], np.float32), [7, 8], 0, 1)
+    assert f.peek() == f.peek() == (1.0, 0, 1, 8)
+    assert len(f) == 2
+    assert f.pop() == (1.0, 0, 1, 8)
+
+
+def test_export_import_roundtrip_mid_stream():
+    rng = np.random.default_rng(1)
+    f = Frontier()
+    for lv in (1, 2, 3):
+        f.push_batch(rng.random(8).astype(np.float32), rng.integers(0, 99, 8), lv == 3, lv)
+    for _ in range(5):
+        f.pop()
+    rows = f.export_rows()
+    assert rows.shape == (len(f), 4) and rows.dtype == np.float64
+    g = Frontier.from_rows(rows)
+    # distances pop in the same global order (ties re-keyed by row order,
+    # matching the old loader's sequential heappush)
+    a = [f.pop() for _ in range(len(f))]
+    b = [g.pop() for _ in range(len(g))]
+    assert [x[0] for x in a] == [x[0] for x in b]
+    assert sorted(a) == sorted(b)
+
+
+def test_from_rows_empty():
+    g = Frontier.from_rows(np.zeros((0, 4), np.float64))
+    assert len(g) == 0 and not g
+
+
+def test_candidate_buffer_matches_list_sort_protocol():
+    """stage/commit/take must replay the old append + stable-sort + slice
+    list protocol exactly, including distance ties."""
+    rng = np.random.default_rng(2)
+    buf = CandidateBuffer()
+    ref: list[tuple[float, int]] = []
+    next_id = itertools.count()
+    for _ in range(12):
+        # one "increment": a few staged leaves, then commit (== list sort)
+        for _ in range(int(rng.integers(1, 5))):
+            w = int(rng.integers(0, 20))
+            d = (rng.integers(0, 5, w) / 2.0).astype(np.float32)
+            ids = np.asarray([next(next_id) for _ in range(w)], np.int64)
+            buf.stage(d, ids)
+            ref.extend((float(x), int(y)) for x, y in zip(d, ids))
+        buf.commit()
+        ref.sort(key=lambda t: t[0])
+        assert len(buf) == len(ref)
+        # one "next(k)": emit from the front
+        k = int(rng.integers(1, 9))
+        dd, ii = buf.take(k)
+        out, ref = ref[: len(dd)], ref[len(dd) :]
+        assert [x[0] for x in out] == list(dd)
+        assert [x[1] for x in out] == list(ii)
+
+
+def test_candidate_buffer_export_items():
+    buf = CandidateBuffer()
+    buf.stage(np.asarray([2.0, 1.0], np.float32), np.asarray([5, 6], np.int64))
+    buf.commit()
+    buf.take(1)
+    buf.stage(np.asarray([0.5], np.float32), np.asarray([7], np.int64))
+    d, i = buf.export_items()  # commits staged items first
+    assert list(i) == [7, 5] and list(d) == [0.5, 2.0]
+    rt = CandidateBuffer.from_items(d, i)
+    assert len(rt) == 2
+    dd, ii = rt.take(5)
+    assert list(ii) == [7, 5]
