@@ -51,31 +51,32 @@ def compare(
         idx = open_index(path, mode="file", backend=backend, cache_max_bytes=cache_bytes)
         load_s = time.perf_counter() - t0
 
-        drain = getattr(idx.store, "drain", None)  # flush async prefetch I/O
-        io0 = idx.store.io.snapshot()
-        cold, warm = [], []
-        for r in range(runs):
-            for q in queries:
-                t0 = time.perf_counter()
-                idx.search(q, k, b=b)
-                (cold if r == 0 else warm).append(time.perf_counter() - t0)
-            if r == 0:
-                if drain is not None:
-                    drain()
-                cold_io = idx.store.io.delta(io0)
-        rows.append(
-            {
-                "backend": backend,
-                "load_s": round(load_s, 4),
-                "lat_cold_s": round(float(np.mean(cold)), 6),
-                "lat_warm_s": round(float(np.mean(warm)), 6) if warm else 0.0,
-                "bytes_read": cold_io.bytes_read,
-                "files_opened": cold_io.files_opened,
-                "reads_issued": cold_io.reads_issued,
-                "cache_bytes": idx.cache.resident_bytes,
-                "budget_bytes": cache_bytes,
-            }
-        )
+        with idx:  # close() frees the prefetch executor + store fd
+            drain = getattr(idx.store, "drain", None)  # flush async prefetch I/O
+            io0 = idx.store.io.snapshot()
+            cold, warm = [], []
+            for r in range(runs):
+                for q in queries:
+                    t0 = time.perf_counter()
+                    idx.search(q, k, b=b)
+                    (cold if r == 0 else warm).append(time.perf_counter() - t0)
+                if r == 0:
+                    if drain is not None:
+                        drain()
+                    cold_io = idx.store.io.delta(io0)
+            rows.append(
+                {
+                    "backend": backend,
+                    "load_s": round(load_s, 4),
+                    "lat_cold_s": round(float(np.mean(cold)), 6),
+                    "lat_warm_s": round(float(np.mean(warm)), 6) if warm else 0.0,
+                    "bytes_read": cold_io.bytes_read,
+                    "files_opened": cold_io.files_opened,
+                    "reads_issued": cold_io.reads_issued,
+                    "cache_bytes": idx.cache.resident_bytes,
+                    "budget_bytes": cache_bytes,
+                }
+            )
     return rows
 
 

@@ -1,0 +1,233 @@
+"""Index-lifecycle benchmark — the write path next to the read path.
+
+One row per lifecycle stage, measured over a private copy of the bench
+collection (the shared suite index stays untouched):
+
+  * ``build/one-shot``      classic in-memory build (vectors/s)
+  * ``build/streaming``     out-of-core build from 4k-row chunks — same
+                            index bit-for-bit, bounded peak memory
+  * ``insert[<backend>]``   streaming ingest through ``ECPIndex.insert``
+                            (routing + leaf appends + 2-means splits),
+                            interleaved with searches: the row also
+                            reports search latency *during* writes vs a
+                            read-only baseline (the insert-while-search
+                            scenario)
+  * ``delete``              tombstone throughput
+  * ``compact[<backend>]``  spool + deterministic rebuild (live vectors/s)
+
+Also usable as a CI smoke gate::
+
+  PYTHONPATH=src python -m benchmarks.lifecycle --smoke
+
+streamed-builds, inserts, deletes, and compacts a tiny index on BOTH
+backends and asserts search parity against a one-shot rebuild of the same
+logical collection under BOTH traversal engines.  Raises on any mismatch.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def _vps(n: int, seconds: float) -> float:
+    return n / seconds if seconds > 0 else float("inf")
+
+
+def run(*, runs: int = 2, n_insert: int = 512, n_queries: int = 16) -> list[dict]:
+    """One row per lifecycle stage over the shared bench collection."""
+    import tempfile
+    from pathlib import Path
+
+    from repro.core import ECPBuildConfig
+
+    from .indexes import get_suite
+
+    s = get_suite()
+    data = s.ds.data
+    n, dim = data.shape
+    cfg = ECPBuildConfig(levels=2, metric="l2", cluster_cap=max(64, n // 256))
+    rng = np.random.default_rng(11)
+    queries = np.stack([t.queries[-1] for t in s.ds.tasks])[:n_queries]
+    new_vecs = (data[rng.integers(0, n, n_insert)]
+                + 0.05 * rng.normal(size=(n_insert, dim))).astype(np.float32)
+    rows: list[dict] = []
+
+    workdir = Path(tempfile.mkdtemp(prefix="ecpfs_lifecycle_"))
+    try:
+        _stages(workdir, rows, data, cfg, queries, new_vecs, runs, n_insert, rng)
+    finally:
+        import shutil
+
+        shutil.rmtree(workdir, ignore_errors=True)
+    return rows
+
+
+def _stages(workdir, rows, data, cfg, queries, new_vecs, runs, n_insert, rng) -> None:
+    """The measured stages, against scratch indexes under ``workdir``
+    (removed by the caller — a full-size run leaves several complete index
+    copies behind otherwise)."""
+    from repro.core import build_index, build_index_streaming, convert, open_index
+
+    n, dim = data.shape
+
+    # ---- builds ----------------------------------------------------------
+    t0 = time.perf_counter()
+    build_index(data, str(workdir / "one"), cfg)
+    one_s = time.perf_counter() - t0
+    rows.append({"scenario": "build/one-shot", "n": n,
+                 "vectors_per_s": round(_vps(n, one_s), 1), "extra": f"{one_s:.2f}s"})
+
+    def chunks():
+        for lo in range(0, n, 4096):
+            yield data[lo : lo + 4096]
+
+    t0 = time.perf_counter()
+    build_index_streaming(chunks, str(workdir / "streamed"), cfg)
+    str_s = time.perf_counter() - t0
+    rows.append({"scenario": "build/streaming", "n": n,
+                 "vectors_per_s": round(_vps(n, str_s), 1),
+                 "extra": f"{str_s:.2f}s; bit-identical, O(chunk) memory"})
+
+    # ---- insert-while-search + compact, per backend ----------------------
+    for backend in ("fstore", "blob"):
+        path = str(workdir / f"mut_{backend}")
+        build_index(data, path, cfg)
+        if backend == "blob":
+            path = str(convert(path, workdir / "mut.blob"))
+        with open_index(path, mode="file", backend=backend) as idx:
+            # read-only search baseline
+            for q in queries:  # warm the cache like the during-writes pass
+                idx.search(q, k=100, b=16)
+            t0 = time.perf_counter()
+            for _ in range(runs):
+                for q in queries:
+                    idx.search(q, k=100, b=16)
+            base_q = (time.perf_counter() - t0) / (runs * len(queries))
+
+            # interleave: insert a batch, then run the query sweep
+            batch = 128
+            ins_s = 0.0
+            dur_q: list[float] = []
+            splits = 0
+            for lo in range(0, n_insert, batch):
+                t0 = time.perf_counter()
+                r = idx.insert(new_vecs[lo : lo + batch],
+                               np.arange(n + lo, n + min(lo + batch, n_insert)))
+                ins_s += time.perf_counter() - t0
+                splits += r["splits"]
+                t0 = time.perf_counter()
+                for q in queries:
+                    idx.search(q, k=100, b=16)
+                dur_q.append((time.perf_counter() - t0) / len(queries))
+            rows.append({
+                "scenario": f"insert[{backend}]",
+                "n": n_insert,
+                "vectors_per_s": round(_vps(n_insert, ins_s), 1),
+                "extra": (f"splits={splits}; search_during_writes="
+                          f"{np.mean(dur_q)*1e6:.0f}us vs readonly={base_q*1e6:.0f}us"),
+            })
+
+            # deletes: tombstone 5% of the originals
+            del_ids = rng.choice(n, max(1, n // 20), replace=False)
+            t0 = time.perf_counter()
+            idx.delete(del_ids)
+            del_s = time.perf_counter() - t0
+            if backend == "fstore":
+                rows.append({"scenario": "delete", "n": len(del_ids),
+                             "vectors_per_s": round(_vps(len(del_ids), del_s), 1),
+                             "extra": "tombstones only; purge happens at compact"})
+
+            t0 = time.perf_counter()
+            r = idx.compact()
+            comp_s = time.perf_counter() - t0
+            rows.append({
+                "scenario": f"compact[{backend}]",
+                "n": r["live"],
+                "vectors_per_s": round(_vps(r["live"], comp_s), 1),
+                "extra": f"purged={r['purged']}; leaves={r['leaves']}; {comp_s:.2f}s",
+            })
+
+
+def smoke(n: int = 2500, dim: int = 16) -> None:
+    """CI gate: streamed build -> insert -> delete -> compact must equal a
+    one-shot rebuild of the logical collection, bit for bit, on both
+    backends under both engines.  Raises on any violation."""
+    import tempfile
+
+    from repro.core import ECPBuildConfig, build_index, build_index_streaming, convert, open_index
+    from repro.data import clustered_vectors
+
+    rng = np.random.default_rng(5)
+    data, _ = clustered_vectors(0, n=n, dim=dim, n_clusters=24)
+    cfg = ECPBuildConfig(levels=2, cluster_cap=64, seed=1)
+    n_ins = 200
+    new_vecs = (data[rng.integers(0, n, n_ins)]
+                + 0.05 * rng.normal(size=(n_ins, dim))).astype(np.float32)
+    new_ids = np.arange(n, n + n_ins)
+    del_ids = np.concatenate([rng.choice(n, 120, replace=False), new_ids[:25]])
+    queries = data[rng.integers(0, n, 12)] + 0.01
+
+    # expected: one-shot build over the logical collection (stored-dtype
+    # values of live originals + live inserts, ascending id order)
+    live = np.ones(n + n_ins, bool)
+    live[del_ids] = False
+    stored = np.concatenate([data, new_vecs]).astype(np.float16).astype(np.float32)
+
+    with tempfile.TemporaryDirectory() as td:
+        build_index(stored[live], td + "/fresh", cfg, item_ids=np.flatnonzero(live))
+        expected = {}
+        with open_index(td + "/fresh", mode="file") as fidx:
+            for i, q in enumerate(queries):
+                rs = fidx.search(q, k=20, b=8)
+                expected[i] = (rs.dists.copy(), rs.ids.copy())
+
+        # streamed build (odd chunking) == one-shot build, before mutations
+        build_index_streaming(
+            (data[lo : lo + 333] for lo in range(0, n, 333)), td + "/idx", cfg
+        )
+        blob = str(convert(td + "/idx", td + "/blob.blob"))
+
+        for backend, path in (("fstore", td + "/idx"), ("blob", blob)):
+            with open_index(path, mode="file", backend=backend) as idx:
+                r = idx.insert(new_vecs, new_ids)
+                assert r["inserted"] == n_ins
+                nd = idx.delete(del_ids)
+                assert nd == len(set(del_ids.tolist()))
+                # tombstones filtered pre-compact, on both engines
+                with open_index(path, mode="file", backend=backend, engine="legacy") as leg:
+                    got = set(leg.search(data[del_ids[0]], k=50, b=32).row_ids(0))
+                    assert not (got & set(del_ids.tolist())), "legacy engine leaked a tombstone"
+                got = set(idx.search(data[del_ids[0]], k=50, b=32).row_ids(0))
+                assert not (got & set(del_ids.tolist())), "flat engine leaked a tombstone"
+                idx.compact()
+            for engine in ("flat", "legacy"):
+                with open_index(path, mode="file", backend=backend, engine=engine) as idx:
+                    for i, q in enumerate(queries):
+                        rs = idx.search(q, k=20, b=8)
+                        ed, ei = expected[i]
+                        np.testing.assert_array_equal(
+                            rs.ids, ei, err_msg=f"{backend}/{engine} ids diverged"
+                        )
+                        np.testing.assert_array_equal(
+                            rs.dists, ed, err_msg=f"{backend}/{engine} dists diverged"
+                        )
+    print(
+        f"lifecycle smoke OK: streamed build + {n_ins} inserts + "
+        f"{len(set(del_ids.tolist()))} deletes + compact == one-shot rebuild, "
+        "bit-identical on fstore+blob under flat+legacy"
+    )
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny build/mutate/compact/parity gate")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+    else:
+        for row in run():
+            print(row)

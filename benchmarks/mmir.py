@@ -91,26 +91,34 @@ def single_query_workload(ds: MMIRDataset, name, searcher, *, k=100, b=None, run
     """
     res = WorkloadResult(name=name, load_s=load_s)
     queries = [q for t in ds.tasks for q in t.queries]
-    for r in range(runs):
-        if r == 0 and reset_fn is not None:
-            searcher = reset_fn()
-        t_run = time.perf_counter()
-        for q in queries:
-            t0 = time.perf_counter()
-            searcher.search(q, k, b=b)
-            dt = time.perf_counter() - t0
-            (res.lat_first_s if r == 0 else res.lat_warm_s).append(dt)
-        res.workload_s.append(time.perf_counter() - t_run)
-    # task completion from the warm run
-    res.n_tasks = len(ds.tasks)
-    for t in ds.tasks:
-        ok = False
-        for q in t.queries:
-            rs = searcher.search(q, k, b=b)
-            if t.target in set(rs.row_ids(0)):
-                ok = True
-                break
-        res.solved += int(ok)
+    created = None  # searcher the workload itself opened (and must close)
+    try:
+        for r in range(runs):
+            if r == 0 and reset_fn is not None:
+                close = getattr(searcher, "close", None)
+                if close is not None:  # the cold replacement orphans it
+                    close()
+                searcher = created = reset_fn()
+            t_run = time.perf_counter()
+            for q in queries:
+                t0 = time.perf_counter()
+                searcher.search(q, k, b=b)
+                dt = time.perf_counter() - t0
+                (res.lat_first_s if r == 0 else res.lat_warm_s).append(dt)
+            res.workload_s.append(time.perf_counter() - t_run)
+        # task completion from the warm run
+        res.n_tasks = len(ds.tasks)
+        for t in ds.tasks:
+            ok = False
+            for q in t.queries:
+                rs = searcher.search(q, k, b=b)
+                if t.target in set(rs.row_ids(0)):
+                    ok = True
+                    break
+            res.solved += int(ok)
+    finally:
+        if created is not None:
+            created.close()
     return res
 
 

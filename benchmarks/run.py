@@ -61,6 +61,7 @@ def main() -> None:
     from . import (
         backends,
         indexes,
+        lifecycle,
         roofline,
         search_engine,
         table2_single_query,
@@ -109,6 +110,13 @@ def main() -> None:
         "Search-engine comparison — legacy vs vectorized single-query vs "
         "batch-dedup traversal (bit-identical parity enforced)",
         se,
+    )
+
+    lc = lifecycle.run(runs=runs, n_insert=256 if args.fast else 512)
+    _print_table(
+        "Index lifecycle — build / insert-while-search / delete / compact "
+        "throughput (write path)",
+        lc,
     )
 
     print("\n=== Roofline (single-pod 16x16, from dry-run artifacts) ===")
@@ -166,6 +174,13 @@ def main() -> None:
                 "files_opened": r["files_opened"],
                 "reads_issued": r["reads_issued"],
             },
+        )
+    for r in lc:
+        # us_per_call = per-vector cost of the lifecycle stage
+        emit(
+            f"lifecycle/{r['scenario']}",
+            1e6 / r["vectors_per_s"] if r["vectors_per_s"] else 0.0,
+            f"vectors_per_s={r['vectors_per_s']};n={r['n']};{r['extra']}",
         )
 
     if args.bench_json:

@@ -15,14 +15,18 @@ def run() -> list[dict]:
     for name, (searcher, b) in s.searchers().items():
         solved = 0
         recalls = []
-        for t in s.ds.tasks:
-            ok = False
-            for q in t.queries:
-                ids = set(searcher.search(q, k, b=b).row_ids(0))
-                gt = set(s.bf.search(q, k).row_ids(0))
-                recalls.append(len(ids & gt) / k)
-                ok = ok or (t.target in ids)
-            solved += int(ok)
+        try:
+            for t in s.ds.tasks:
+                ok = False
+                for q in t.queries:
+                    ids = set(searcher.search(q, k, b=b).row_ids(0))
+                    gt = set(s.bf.search(q, k).row_ids(0))
+                    recalls.append(len(ids & gt) / k)
+                    ok = ok or (t.target in ids)
+                solved += int(ok)
+        finally:
+            if name == "eCP-FS":  # searchers() opened a fresh file-mode index
+                searcher.close()
         rows.append(
             {
                 "index": name,

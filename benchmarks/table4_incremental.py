@@ -26,10 +26,11 @@ def run(
     t0 = time.perf_counter()
     ecp = s.fresh_ecp(backend)
     load_s = time.perf_counter() - t0
-    r = incremental_workload(
-        s.ds, f"eCP-FS[{backend}]", ecp, k=k, b=p["b"]["eCP-FS"],
-        rounds=rounds, runs=runs, load_s=load_s,
-    )
+    with ecp:
+        r = incremental_workload(
+            s.ds, f"eCP-FS[{backend}]", ecp, k=k, b=p["b"]["eCP-FS"],
+            rounds=rounds, runs=runs, load_s=load_s,
+        )
     rows.append(r.row())
 
     # --- baselines: RestartQuery re-searches with k + k*round internally

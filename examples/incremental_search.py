@@ -14,6 +14,7 @@ with tempfile.TemporaryDirectory() as td:
     data, _ = clustered_vectors(7, n=30_000, dim=64, n_clusters=128)
     build_index(data, path, ECPBuildConfig(levels=2, cluster_cap=150))
     index = open_index(path, mode="file")
+    fresh = None
     q = data[42]
 
     # -- External continuation: a long-running session asking for more
@@ -37,7 +38,7 @@ with tempfile.TemporaryDirectory() as td:
     # -- Persistence: the query state is saved INTO the file structure and
     #    resumed by a completely fresh process/index instance (paper §6.2)
     token = handle.save()
-    fresh = open_index(path, mode="file")
+    fresh = open_index(path, mode="file")  # closed at the end, with `index`
     resumed = fresh.load_query(token)
     a = handle.next(10)
     b = resumed.next(10)
@@ -50,3 +51,7 @@ with tempfile.TemporaryDirectory() as td:
         handle.next(10)
     except QueryClosedError as e:
         print("closed handle raises:", e)
+
+    # -- Indexes are context managers too; close() frees prefetch executors
+    index.close()
+    fresh.close()

@@ -52,3 +52,16 @@ with tempfile.TemporaryDirectory() as td:
     st = session.stats()
     print(f"after live resize to 0.5 MiB: {st['resident_bytes']/2**20:.2f} MiB resident, "
           f"per-index: { {n: v['nodes'] for n, v in st['per_index'].items()} }")
+
+    # writes through a session index invalidate exactly the rewritten nodes
+    # in the SHARED cache (keys are namespaced), so co-located readers never
+    # see stale data — and the other indexes' cached nodes stay resident
+    lifelog = session["lifelog"]
+    vec = datasets["lifelog"][123] + 0.05
+    lifelog.insert(vec[None, :], [20_000])
+    rs = session.search("lifelog", vec, k=3, b=8)
+    print(f"\nafter insert: hit={rs.pairs()[0][1]} (new item), "
+          f"generation={lifelog.generation}")
+
+    # one call closes every index (prefetch executors, store fds) + cache
+    session.close()

@@ -30,27 +30,38 @@ with tempfile.TemporaryDirectory() as td:
     print("first cluster on disk:", meta["shape"], meta["dtype"], "raw chunks:",
           sorted(p.name for p in (node0 / "embeddings").iterdir() if not p.name.startswith(".")))
 
-    # 4) search with a bounded memory footprint (LRU over 32 nodes)
-    index = open_index(str(path), mode="file", cache_max_nodes=32)
-    q = data[1234] + 0.01 * np.random.default_rng(1).normal(size=128).astype(np.float32)
-    rs = index.search(q, k=10, b=8)
-    print("\ntop-10:", [(round(d, 3), i) for d, i in rs.pairs()])
+    # 4) search with a bounded memory footprint (LRU over 32 nodes); the
+    #    index is a context manager — closing frees its prefetch executor
+    with open_index(str(path), mode="file", cache_max_nodes=32) as index:
+        q = data[1234] + 0.01 * np.random.default_rng(1).normal(size=128).astype(np.float32)
+        rs = index.search(q, k=10, b=8)
+        print("\ntop-10:", [(round(d, 3), i) for d, i in rs.pairs()])
 
-    # 5) incremental: 10 more WITHOUT re-searching — the ResultSet's Query
-    #    handle owns the frontier (T queue) and resumes from it
-    more = rs.query.next(10)
-    print("next-10:", [(round(d, 3), i) for d, i in more.pairs()])
-    print("stats:", rs.query.stats)
-    print("cache resident nodes:", index.cache.n_resident, "(bound 32)")
-    rs.query.close()
+        # 5) incremental: 10 more WITHOUT re-searching — the ResultSet's Query
+        #    handle owns the frontier (T queue) and resumes from it
+        more = rs.query.next(10)
+        print("next-10:", [(round(d, 3), i) for d, i in more.pairs()])
+        print("stats:", rs.query.stats)
+        print("cache resident nodes:", index.cache.n_resident, "(bound 32)")
+        rs.query.close()
 
-    # 6) the same index as a page-aligned single file (the serialized form
-    #    the paper compares against): one pread per node instead of JSON +
-    #    chunk files — identical results, measurably less I/O
-    blob = convert(path, pathlib.Path(td) / "my_index.blob")
-    bindex = open_index(str(blob), mode="file", cache_max_nodes=32)
-    rsb = bindex.search(q, k=10, b=8)
-    assert [i for _, i in rsb.pairs()] == [i for _, i in rs.pairs()]
-    print("\nblob file:", blob.name, f"({blob.stat().st_size/2**20:.1f} MiB)")
-    print("fstore io:", index.store.io.as_dict())
-    print("blob io:  ", bindex.store.io.as_dict())
+        # 6) the same index as a page-aligned single file (the serialized form
+        #    the paper compares against): one pread per node instead of JSON +
+        #    chunk files — identical results, measurably less I/O
+        blob = convert(path, pathlib.Path(td) / "my_index.blob")
+        with open_index(str(blob), mode="file", cache_max_nodes=32) as bindex:
+            rsb = bindex.search(q, k=10, b=8)
+            assert [i for _, i in rsb.pairs()] == [i for _, i in rs.pairs()]
+            print("\nblob file:", blob.name, f"({blob.stat().st_size/2**20:.1f} MiB)")
+            print("fstore io:", index.store.io.as_dict())
+            print("blob io:  ", bindex.store.io.as_dict())
+
+    # 7) the index is MUTABLE (core/lifecycle.py): ingest, tombstone, then
+    #    compact back to exactly what a fresh build would produce
+    with open_index(str(path), mode="file") as index:
+        new = data[:8] + 0.02 * np.random.default_rng(2).normal(size=(8, 128)).astype(np.float32)
+        print("\ninsert:", index.insert(new, np.arange(50_000, 50_008)))
+        index.delete([3, 7, 50_001])
+        assert 50_002 in index.search(new[2], k=5, b=8).row_ids(0)
+        assert 50_001 not in index.search(new[1], k=5, b=8).row_ids(0)  # tombstoned
+        print("compact:", index.compact())

@@ -8,9 +8,17 @@ Public API (everything speaks core/api.py's unified shape):
   open_index(path, mode)           — file | packed | auto searcher factory
   MultiIndexSession                — N indexes under one shared byte-budget
                                      NodeCache (global LRU, live-resizable)
-  build_index / ECPBuildConfig     — top-down index construction (build.py)
+  build_index / ECPBuildConfig     — top-down index construction (lifecycle.py,
+                                     re-exported through build.py)
+  build_index_streaming            — out-of-core build from a chunk iterator:
+                                     O(chunk + leaders) peak memory, result
+                                     bit-identical to the one-shot build
   ECPIndex / ECPQuery              — file-structure retrieval with LRU cache
-                                     and incremental search (search.py)
+                                     and incremental search (search.py); a
+                                     MutableIndex: insert (leaf appends +
+                                     2-means splits), delete (tombstones),
+                                     compact (deterministic rebuild equal to
+                                     a fresh build of the live collection)
   BatchedSearcher / BatchedQuery   — TPU-native batched beam search (batched.py)
   Store / open_store               — pluggable node storage (store.py):
                                      FStoreBackend (zarr-v2 hierarchy),
@@ -24,6 +32,7 @@ Public API (everything speaks core/api.py's unified shape):
 """
 from .api import (
     MultiIndexSession,
+    MutableIndex,
     NodeCache,
     Query,
     QueryClosedError,
@@ -31,9 +40,11 @@ from .api import (
     ResultSet,
     Searcher,
     SearchStats,
+    StaleQueryError,
     open_index,
 )
 from .build import ECPBuildConfig, build_index
+from .lifecycle import build_index_streaming, reservoir_sample
 from .batched import BatchedQuery, BatchedQueryState, BatchedSearcher
 from .frontier import CandidateBuffer, Frontier
 from .fstore import FStore
@@ -54,9 +65,11 @@ from .store import (
 
 __all__ = [
     "Searcher",
+    "MutableIndex",
     "ResultSet",
     "Query",
     "QueryClosedError",
+    "StaleQueryError",
     "RestartQuery",
     "SearchStats",
     "IOStats",
@@ -71,6 +84,8 @@ __all__ = [
     "AsyncPrefetchStore",
     "ECPBuildConfig",
     "build_index",
+    "build_index_streaming",
+    "reservoir_sample",
     "BatchedQuery",
     "BatchedQueryState",
     "BatchedSearcher",

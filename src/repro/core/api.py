@@ -54,8 +54,10 @@ __all__ = [
     "ResultSet",
     "Query",
     "QueryClosedError",
+    "StaleQueryError",
     "RestartQuery",
     "Searcher",
+    "MutableIndex",
     "open_index",
     "MultiIndexSession",
 ]
@@ -65,6 +67,13 @@ _UNSET = object()
 
 class QueryClosedError(RuntimeError):
     """Raised when ``next``/``save`` is called on a closed Query handle."""
+
+
+class StaleQueryError(RuntimeError):
+    """Raised when a Query handle outlives a structural rewrite of its
+    index (``compact()`` renumbers nodes, so a saved frontier no longer
+    means anything).  Inserts and deletes do NOT stale a handle — they
+    are append/tombstone-only."""
 
 
 @dataclass
@@ -150,6 +159,25 @@ class NodeCache:
         (used by prefetch heuristics to skip already-resident nodes)."""
         with self._lock:
             return key in self._d
+
+    def invalidate(self, key) -> bool:
+        """Drop one entry (a node that was rewritten on disk); returns
+        whether it was resident."""
+        with self._lock:
+            v = self._d.pop(key, None)
+            if v is None:
+                return False
+            self._nbytes -= self._entry_bytes(v)
+            return True
+
+    def invalidate_namespace(self, ns) -> int:
+        """Drop every entry of one index's namespace (compaction rewrote
+        its whole tree); returns the number of entries dropped."""
+        with self._lock:
+            stale = [k for k in self._d if k[0] == ns]
+            for k in stale:
+                self._nbytes -= self._entry_bytes(self._d.pop(k))
+            return len(stale)
 
     def get(self, key):
         with self._lock:
@@ -322,6 +350,25 @@ class Searcher(Protocol):
         ...
 
 
+@runtime_checkable
+class MutableIndex(Protocol):
+    """A searcher whose index mutates while serving (core/lifecycle.py):
+    ``insert`` appends + splits leaves, ``delete`` tombstones, ``compact``
+    rewrites the tree to equal a fresh build of the live collection."""
+
+    def search(self, q, k: int = 100, *, b=None, **opts) -> ResultSet:
+        ...
+
+    def insert(self, vectors, ids=None) -> dict:
+        ...
+
+    def delete(self, ids) -> int:
+        ...
+
+    def compact(self) -> dict:
+        ...
+
+
 # ------------------------------------------------------------------ factory
 def open_index(
     path,
@@ -464,6 +511,31 @@ class MultiIndexSession:
             },
         }
 
+    def invalidate(self, name: str) -> int:
+        """Resynchronize one index whose files changed on disk outside
+        this process: refresh its in-memory metadata/root/tombstones when
+        the searcher supports it (``ECPIndex.refresh``), and drop its
+        cached nodes.  Indexes opened through the session invalidate
+        themselves on their own writes — this is for external writers."""
+        s = self._indexes.get(name)
+        refresh = getattr(s, "refresh", None)
+        if refresh is not None:
+            refresh()  # includes invalidate_namespace(name)
+            return 0
+        return self.cache.invalidate_namespace(name)
+
     def close(self) -> None:
+        """Close every index opened through the session (freeing prefetch
+        executors and store fds) and drop the shared cache."""
+        for s in self._indexes.values():
+            close = getattr(s, "close", None)
+            if close is not None:
+                close()
         self._indexes.clear()
         self.cache.clear()
+
+    def __enter__(self) -> "MultiIndexSession":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

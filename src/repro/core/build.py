@@ -1,178 +1,13 @@
-"""Top-down eCP index construction (paper §3), JAX-accelerated.
+"""Top-down eCP index construction (paper §3) — stable import site.
 
-The build follows eCP faithfully:
-  * cluster leaders are sampled uniformly at random from the collection
-    (the paper: "crude, but simple and fast");
-  * upper-level centroids are nested random prefixes of the leader set;
-  * the hierarchy is built *top-down*: level i+1 nodes are assigned to their
-    nearest level-i centroid, then every item is inserted by traversing the
-    partially-built tree along the most-similar edge (beam=1, as the paper's
-    footnote 1 describes);
-  * the result is written to the transparent file structure (layout.py).
-
-Distance math runs on-device (jit) in batches; the scatter of items into
-clusters and all file writes are host-side.
+The build machinery moved into the staged lifecycle subsystem
+(``core/lifecycle.py``), where the one-shot build is one stage among
+streaming out-of-core construction, incremental insert/delete, and
+compaction.  This module re-exports the construction API so existing
+imports (``repro.core.build``) keep working.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from functools import partial
+from .lifecycle import ECPBuildConfig, build_index, build_index_streaming
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from . import layout
-from .distances import jnp_distances
-from .packed import PackedLevel, pack_children
-from .store import FStoreBackend, open_store
-
-__all__ = ["ECPBuildConfig", "build_index"]
-
-
-@dataclass(frozen=True)
-class ECPBuildConfig:
-    levels: int = 2                  # L
-    metric: str = "l2"
-    cluster_cap: int | None = None   # target vectors per cluster (C/V)
-    cluster_bytes: int | None = 128 * 1024  # C; used if cluster_cap is None
-    storage_dtype: str = "float16"   # on-disk embedding dtype (paper stores f16)
-    seed: int = 0
-    insert_batch: int = 8192         # items per device batch during insertion
-    leaf_chunk_rows: int | None = None  # one chunk per cluster by default
-
-
-def _resolve_cap(cfg: ECPBuildConfig, dim: int, itemsize: int) -> int:
-    if cfg.cluster_cap is not None:
-        return max(1, int(cfg.cluster_cap))
-    assert cfg.cluster_bytes is not None
-    return max(1, int(cfg.cluster_bytes) // (dim * itemsize))
-
-
-@partial(jax.jit, static_argnames=("metric",))
-def _assign_level(child_emb: jnp.ndarray, parent_emb: jnp.ndarray, metric: str):
-    """Nearest parent centroid for each child centroid. [n_child] int32."""
-    d = jnp_distances(child_emb, parent_emb, metric)
-    return jnp.argmin(d, axis=-1).astype(jnp.int32)
-
-
-def _make_insert_fn(root_emb: np.ndarray, internal: list[PackedLevel], metric: str):
-    """Batched top-down traversal: items -> leaf node indices (beam=1)."""
-    root = jnp.asarray(root_emb)
-    embs = [jnp.asarray(p.emb) for p in internal]
-    idss = [jnp.asarray(p.ids) for p in internal]
-    masks = [jnp.asarray(p.mask) for p in internal]
-
-    @jax.jit
-    def insert(q):  # q: [B, D] float32 -> [B] int32 leaf ids
-        d = jnp_distances(q, root, metric)                     # [B, n1]
-        node = jnp.argmin(d, axis=-1).astype(jnp.int32)        # lvl_1 node
-        for emb, ids, mask in zip(embs, idss, masks):
-            ce = emb[node]                                     # [B, maxc, D]
-            cd = jnp_distances(q[:, None, :], ce, metric)[:, 0, :]  # [B, maxc]
-            cd = jnp.where(mask[node], cd, jnp.inf)
-            best = jnp.argmin(cd, axis=-1)
-            node = ids[node, best]                             # next-level node
-        return node
-
-    return insert
-
-
-def build_index(
-    data: np.ndarray,
-    path: str,
-    cfg: ECPBuildConfig = ECPBuildConfig(),
-    *,
-    item_ids: np.ndarray | None = None,
-) -> FStoreBackend:
-    """Build an eCP-FS index over ``data`` [N, D] at directory ``path``.
-
-    The index is always built into the writable file-structure backend
-    (the paper's human-readable form); serialize it afterwards with
-    ``repro.core.store.convert(path, blob_path)`` for the blob backend.
-    """
-    data = np.asarray(data)
-    n_items, dim = data.shape
-    if item_ids is None:
-        item_ids = np.arange(n_items, dtype=np.int64)
-    store_dt = np.dtype(cfg.storage_dtype)
-    cap = _resolve_cap(cfg, dim, store_dt.itemsize)
-    n_leaders, fanout, nodes_per_level = layout.derive_shape(n_items, cap, cfg.levels)
-    L = cfg.levels
-
-    rng = np.random.default_rng(cfg.seed)
-    leader_idx = rng.choice(n_items, size=n_leaders, replace=False)
-    leaders = np.asarray(data[leader_idx], np.float32)         # [l, D]
-
-    # --- internal hierarchy: nested prefixes + nearest-parent assignment ---
-    # centroids at lvl_i are leaders[:nodes_per_level[i-1]]
-    children: list[list[np.ndarray]] = []  # children[i] -> per-node child idx lists at lvl_{i+1}
-    for i in range(1, L):                  # parents at lvl_i, children at lvl_{i+1}
-        n_parent = nodes_per_level[i - 1]
-        n_child = nodes_per_level[i]
-        assign = np.asarray(
-            _assign_level(jnp.asarray(leaders[:n_child]), jnp.asarray(leaders[:n_parent]), cfg.metric)
-        )
-        lists: list[list[int]] = [[] for _ in range(n_parent)]
-        for child, parent in enumerate(assign):
-            lists[int(parent)].append(child)
-        children.append([np.asarray(x, np.int32) for x in lists])
-
-    internal_packed: list[PackedLevel] = []
-    for i, lists in enumerate(children):
-        emb_lists = [leaders[ids] for ids in lists]
-        internal_packed.append(pack_children(emb_lists, lists, dim))
-
-    # --- item insertion: batched beam-1 traversal -------------------------
-    root_emb = leaders[: nodes_per_level[0]]
-    insert = _make_insert_fn(root_emb, internal_packed, cfg.metric)
-    leaf_of = np.empty(n_items, np.int32)
-    for lo in range(0, n_items, cfg.insert_batch):
-        hi = min(lo + cfg.insert_batch, n_items)
-        q = jnp.asarray(data[lo:hi], jnp.float32)
-        leaf_of[lo:hi] = np.asarray(insert(q))
-
-    # --- write the file structure -----------------------------------------
-    store = open_store(path, backend="fstore", create=True)
-    info = layout.IndexInfo(
-        levels=L,
-        metric=cfg.metric,
-        dim=dim,
-        dtype=str(store_dt),
-        n_items=n_items,
-        cluster_cap=cap,
-        n_leaders=n_leaders,
-        fanout=fanout,
-        nodes_per_level=nodes_per_level,
-        seed=cfg.seed,
-    )
-    store.create_group(layout.INFO, attrs=info.to_attrs())
-    store.write_array(layout.REP_EMB, leaders.astype(store_dt), chunk_rows=4096)
-    store.write_array(layout.REP_IDS, leader_idx.astype(np.int64), chunk_rows=65536)
-    # the root is node (0, 0) of the Store protocol
-    store.write_node(
-        0, 0, root_emb.astype(store_dt), np.arange(len(root_emb), dtype=np.int32)
-    )
-
-    # internal levels: lvl_1 .. lvl_{L-1}
-    for i, lists in enumerate(children):
-        lv = i + 1
-        store.create_group(layout.lvl_group(lv))
-        for j, ids in enumerate(lists):
-            store.write_node(lv, j, leaders[ids].astype(store_dt), ids.astype(np.int32))
-
-    # leaf level: lvl_L clusters (item embeddings + item ids)
-    store.create_group(layout.lvl_group(L))
-    order = np.argsort(leaf_of, kind="stable")
-    sorted_leaf = leaf_of[order]
-    bounds = np.searchsorted(sorted_leaf, np.arange(n_leaders + 1))
-    for j in range(n_leaders):
-        members = order[bounds[j] : bounds[j + 1]]
-        store.write_node(
-            L,
-            j,
-            np.asarray(data[members], store_dt),
-            item_ids[members].astype(np.int64),
-            chunk_rows=cfg.leaf_chunk_rows,
-        )
-    return store
+__all__ = ["ECPBuildConfig", "build_index", "build_index_streaming"]

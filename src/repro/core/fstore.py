@@ -187,6 +187,79 @@ class FStore:
             tmp = p / (name + ".tmp")
             tmp.write_bytes(np.ascontiguousarray(block).tobytes())
             os.replace(tmp, p / name)
+        # overwriting a larger array leaves chunk files past the new grid;
+        # reads honor the metadata, but stale chunks would shadow future
+        # appends (and lie to anyone inspecting the files) — drop them
+        for child in p.iterdir():
+            if child.name.startswith("."):
+                continue
+            head = child.name.split(".", 1)[0]
+            if head.isdigit() and int(head) >= n_chunks:
+                child.unlink()
+
+    def append_rows(self, path: str, arr: np.ndarray, *, chunk_rows: int | None = None) -> None:
+        """Append rows to an axis-0-chunked array, touching only the
+        trailing partial chunk plus the new chunks (the out-of-core build
+        appends leaf blocks incrementally; rewriting the whole array per
+        append would be quadratic).  Creates the array when missing
+        (``chunk_rows`` then sets the chunk size).  The metadata's shape is
+        rewritten *after* the chunk files, so a torn append leaves the old
+        (consistent) view."""
+        arr = np.ascontiguousarray(arr)
+        if arr.shape[0] == 0:
+            if not self.is_array(path):
+                self.write_array(path, arr, chunk_rows=chunk_rows)
+            return
+        if not self.is_array(path):
+            self.write_array(path, arr, chunk_rows=chunk_rows)
+            return
+        p = self._p(path)
+        meta = self.array_meta(path)
+        shape, chunks = meta["shape"], meta["chunks"]
+        dt = zarr_to_dtype(meta["dtype"])
+        if list(arr.shape[1:]) != shape[1:] or np.dtype(arr.dtype) != dt:
+            raise ValueError(
+                f"append_rows mismatch at {path}: array is {shape[1:]}/{dt}, "
+                f"got {list(arr.shape[1:])}/{arr.dtype}"
+            )
+        rows, cr = shape[0], chunks[0]
+        if rows == 0:
+            # zero-row arrays carry a degenerate 1-row chunk grid; replace
+            # wholesale so the appended array gets a sensible chunk size
+            self.write_array(path, arr, chunk_rows=chunk_rows)
+            return
+        trailing_zeros = ".".join(["0"] * (len(shape) - 1))
+
+        def chunk_name(ci: int) -> str:
+            return str(ci) if not trailing_zeros else f"{ci}.{trailing_zeros}"
+
+        new_rows = rows + arr.shape[0]
+        at = 0  # rows of ``arr`` consumed
+        # 1) fill the trailing partial chunk in place (tmp + replace)
+        if rows % cr:
+            ci = rows // cr
+            fill = min(cr - rows % cr, arr.shape[0])
+            cp = p / chunk_name(ci)
+            block = np.frombuffer(cp.read_bytes(), dtype=dt).reshape([cr] + shape[1:]).copy()
+            block[rows % cr : rows % cr + fill] = arr[:fill]
+            tmp = p / (chunk_name(ci) + ".tmp")
+            tmp.write_bytes(block.tobytes())
+            os.replace(tmp, cp)
+            at = fill
+        # 2) whole new chunks
+        ci = (rows + at) // cr
+        while at < arr.shape[0]:
+            block = arr[at : at + cr]
+            if block.shape[0] < cr:
+                pad = np.zeros((cr - block.shape[0],) + block.shape[1:], dt)
+                block = np.concatenate([block, pad], axis=0)
+            tmp = p / (chunk_name(ci) + ".tmp")
+            tmp.write_bytes(np.ascontiguousarray(block).tobytes())
+            os.replace(tmp, p / chunk_name(ci))
+            at += cr
+            ci += 1
+        meta["shape"] = [new_rows] + shape[1:]
+        self._write_json(p / ".zarray", meta)
 
     def array_meta(self, path: str) -> dict:
         return self._read_json(self._p(path) / ".zarray")

@@ -28,6 +28,29 @@ IDS = "ids"
 REP_EMB = "rep/embeddings"
 REP_IDS = "rep/item_ids"
 
+# Mutation metadata (index lifecycle, core/lifecycle.py).  Both live in the
+# ``info`` group's attributes next to the IndexInfo fields so every backend
+# (including the single-file blob, whose only attribute store is the header's
+# ``info`` dict) carries them:
+#   GENERATION   int, bumped by every mutation (insert/delete/compact);
+#                readers use it to detect that an index changed under them.
+#   DELETED_IDS  sorted list of tombstoned item ids; the search engines
+#                filter them during leaf scoring and compact() purges them.
+GENERATION = "generation"
+DELETED_IDS = "deleted_ids"
+
+
+def read_tombstones(attrs: dict) -> set:
+    """The tombstone set recorded in the ``info`` attributes."""
+    return {int(x) for x in attrs.get(DELETED_IDS, [])}
+
+
+def write_tombstones(attrs: dict, tombstones: set) -> dict:
+    """Return ``attrs`` updated with a canonical (sorted) tombstone list."""
+    attrs = dict(attrs)
+    attrs[DELETED_IDS] = sorted(int(x) for x in tombstones)
+    return attrs
+
 
 def lvl_group(level: int) -> str:
     return f"lvl_{level}"
@@ -60,6 +83,12 @@ class IndexInfo:
     nodes_per_level: tuple[int, ...] = field(default_factory=tuple)  # n_1..n_L
     seed: int = 0
     version: str = "ecp-fs/1"
+    generation: int = 0      # bumped by every mutation (lifecycle.py)
+    insert_batch: int = 8192  # build-time assignment batch; compact() replays
+                              # it so its rebuild is bit-reproducible
+    next_id: int = 0         # smallest never-used item id: default insert ids
+                             # allocate from here (monotonic across compact(),
+                             # so purged ids are never reissued)
 
     def to_attrs(self) -> dict:
         return {
@@ -74,6 +103,9 @@ class IndexInfo:
             "nodes_per_level": list(self.nodes_per_level),
             "seed": self.seed,
             "version": self.version,
+            GENERATION: self.generation,
+            "insert_batch": self.insert_batch,
+            "next_id": self.next_id,
         }
 
     @staticmethod
@@ -90,18 +122,28 @@ class IndexInfo:
             nodes_per_level=tuple(int(x) for x in a.get("nodes_per_level", [])),
             seed=int(a.get("seed", 0)),
             version=str(a.get("version", "ecp-fs/1")),
+            generation=int(a.get(GENERATION, 0)),
+            insert_batch=int(a.get("insert_batch", 8192)),
+            # legacy indexes (no next_id) used default positional ids
+            next_id=int(a.get("next_id", a.get("n_items", 0))),
         )
 
 
-def derive_shape(n_items: int, cluster_cap: int, levels: int) -> tuple[int, int, tuple[int, ...]]:
+def derive_shape(
+    n_items: int, cluster_cap: int, levels: int, *, n_leaders: int | None = None
+) -> tuple[int, int, tuple[int, ...]]:
     """Paper §3: l = N·V/C leaders, w = l^(1/L) fanout.
 
     Returns (n_leaders, fanout, nodes_per_level) where nodes_per_level[i]
-    is the node count at lvl_{i+1} (so [-1] == n_leaders).
+    is the node count at lvl_{i+1} (so [-1] == n_leaders).  ``n_leaders``
+    overrides the derived leader count (the streaming build's reservoir
+    mode, where the collection size is unknown until the stream ends).
     """
     if levels < 1:
         raise ValueError("levels must be >= 1")
-    n_leaders = max(1, math.ceil(n_items / max(1, cluster_cap)))
+    if n_leaders is None:
+        n_leaders = max(1, math.ceil(n_items / max(1, cluster_cap)))
+    n_leaders = max(1, int(n_leaders))
     fanout = max(1, math.ceil(n_leaders ** (1.0 / levels)))
     nodes = []
     for i in range(1, levels + 1):

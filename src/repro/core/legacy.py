@@ -86,9 +86,10 @@ def incremental_search(index, qs: LegacyQueryState, k: int) -> None:
         qs.stats.distance_calcs += len(ids)
         if is_leaf:
             qs.stats.leaves_opened += 1
+            tomb = index._tombstones  # lifecycle deletes filter at scan time
             for c, cd in zip(ids, d):
                 c = int(c)
-                if c not in qs.exclude:
+                if c not in qs.exclude and c not in tomb:
                     qs.I.append((float(cd), c))
             leaf_cnt += 1
         else:

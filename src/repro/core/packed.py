@@ -84,7 +84,13 @@ def load_packed(store, *, max_leaf_pad: int = 8, batch: int = 256) -> PackedInde
         store = FStoreBackend(store)
     elif not isinstance(store, Store):
         store = open_store(store)
-    info = layout.IndexInfo.from_attrs(store.read_attrs(layout.INFO))
+    attrs = store.read_attrs(layout.INFO)
+    info = layout.IndexInfo.from_attrs(attrs)
+    if attrs.get(layout.DELETED_IDS):
+        raise ValueError(
+            "index holds tombstoned items, which the packed device search "
+            "does not filter; run ECPIndex.compact() before load_packed()"
+        )
     root_emb, _ = store.get_node(0, 0)
     levels = []
     for lv in range(1, info.levels + 1):

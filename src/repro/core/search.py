@@ -58,8 +58,8 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from . import layout, legacy
-from .api import NodeCache, Query, ResultSet, SearchStats, pack_rows
+from . import layout, legacy, lifecycle
+from .api import NodeCache, Query, ResultSet, SearchStats, StaleQueryError, pack_rows
 from .distances import np_distances
 from .frontier import CandidateBuffer, Frontier
 from .store import NodeNormCache, Store, open_store
@@ -148,6 +148,17 @@ class ECPQuery(Query):
         self._states = states
         self._single = single
         self._batch_stats = batch_stats
+        # a structural rewrite (compact) renumbers nodes; frontiers made
+        # before it must not resume over the new tree
+        self._epoch = index._epoch
+
+    def _ensure_open(self) -> None:
+        super()._ensure_open()
+        if self._epoch != self._index._epoch:
+            raise StaleQueryError(
+                "the index was compacted after this query started; node "
+                "references in its frontier are stale — re-issue the search"
+            )
 
     # ------------------------------------------------------------- access
     @property
@@ -262,13 +273,23 @@ class ECPIndex:
         if engine not in ENGINES:
             raise ValueError(f"unknown engine: {engine!r} ({'|'.join(ENGINES)})")
         self._owns_store = not isinstance(path, Store)
+        self._reopen = (
+            dict(path=path, backend=backend, prefetch=prefetch,
+                 prefetch_workers=prefetch_workers)
+            if self._owns_store
+            else None
+        )
         self.store = (
             path
             if isinstance(path, Store)
             else open_store(path, backend=backend, prefetch=prefetch,
                             prefetch_workers=prefetch_workers)
         )
-        self.info = layout.IndexInfo.from_attrs(self.store.read_attrs(layout.INFO))
+        attrs = self.store.read_attrs(layout.INFO)
+        self.info = layout.IndexInfo.from_attrs(attrs)
+        self._tombstones: set = layout.read_tombstones(attrs)
+        self._tomb_arr: np.ndarray | None = None
+        self._epoch = 0  # bumped by structural rewrites (compact)
         # Loading the index = read info + the root node only (paper §4.2).
         self.root_emb, self.root_ids = self.store.get_node(0, 0)
         self.cache = cache if cache is not None else NodeCache(
@@ -367,6 +388,95 @@ class ECPIndex:
         if self._owns_store and self.store is not None:
             self.store.close()
 
+    def __enter__(self) -> "ECPIndex":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ----------------------------------------------------------- mutation
+    def insert(self, vectors, ids=None) -> dict:
+        """Insert vectors into the live index (core/lifecycle.py): beam-1
+        routing, leaf appends, 2-means splits past ``cluster_cap``."""
+        return lifecycle.insert_items(self, vectors, ids)
+
+    def delete(self, ids) -> int:
+        """Tombstone item ids; both engines filter them from results."""
+        return lifecycle.delete_items(self, ids)
+
+    def compact(self) -> dict:
+        """Purge tombstones + rebalance splits by rebuilding from the live
+        items — bit-identical to a fresh build of the logical collection."""
+        return lifecycle.compact(self)
+
+    @property
+    def tombstones(self) -> set:
+        """Tombstoned item ids (a copy; mutate via ``delete``)."""
+        return set(self._tombstones)
+
+    @property
+    def generation(self) -> int:
+        return self.info.generation
+
+    def _tomb_sorted(self) -> np.ndarray | None:
+        """Tombstones as a cached sorted array (np.isin operand)."""
+        if not self._tombstones:
+            return None
+        if self._tomb_arr is None or len(self._tomb_arr) != len(self._tombstones):
+            self._tomb_arr = np.sort(
+                np.fromiter(self._tombstones, np.int64, len(self._tombstones))
+            )
+        return self._tomb_arr
+
+    def _apply_mutation(
+        self, new_info, written, *, tombstones: set | None = None, structural: bool = False
+    ) -> None:
+        """Post-mutation bookkeeping (called by core/lifecycle.py): cache
+        invalidation for rewritten nodes (covers a shared MultiIndexSession
+        cache — keys are namespaced), metadata refresh, root reload."""
+        if structural:
+            self.cache.invalidate_namespace(self._ns)
+            if self._norms is not None:
+                self._norms.clear()
+            self._epoch += 1
+        else:
+            for key in written:
+                self.cache.invalidate((self._ns, *key))
+        if tombstones is not None:
+            self._tombstones = set(tombstones)
+            self._tomb_arr = None
+        if new_info is not None:
+            self.info = new_info
+        if structural or (0, 0) in set(written):
+            self.root_emb, self.root_ids = self.store.get_node(0, 0)
+
+    def _reload_store(self) -> None:
+        """Reopen the underlying store after its file was swapped (blob
+        compaction); the old fd would keep serving the old file."""
+        if self._reopen is None:
+            raise ValueError(
+                "cannot reopen a caller-provided Store; open the index "
+                "from a path to use blob compaction"
+            )
+        self.store.close()
+        self.store = open_store(**self._reopen)
+        self._store_prefetch = getattr(self.store, "prefetch", None)
+
+    def refresh(self) -> None:
+        """Resynchronize with the files after they changed OUTSIDE this
+        process (another writer mutated or compacted the index): reopen a
+        swapped blob, re-read metadata/tombstones/root, drop every cached
+        node.  Open query handles become stale (``StaleQueryError``)."""
+        if self.store.backend.startswith("blob") and self._reopen is not None:
+            self._reload_store()  # an os.replace'd blob needs a fresh fd
+        attrs = self.store.read_attrs(layout.INFO)
+        self._apply_mutation(
+            layout.IndexInfo.from_attrs(attrs),
+            (),
+            tombstones=layout.read_tombstones(attrs),
+            structural=True,
+        )
+
     # ------------------------------------------------------------ scoring
     def _sqnorms(self, level: int, node: int, emb: np.ndarray) -> np.ndarray | None:
         if self._norms is None or len(emb) == 0:
@@ -381,6 +491,11 @@ class ECPIndex:
         return np_distances(q, emb, self.info.metric, c_sqnorms=sq)
 
     def _stage_leaf(self, qs: QueryState, d: np.ndarray, ids: np.ndarray) -> None:
+        tomb = self._tomb_sorted()
+        if tomb is not None and len(ids):
+            keep = ~np.isin(ids, tomb)
+            if not keep.all():
+                d, ids = d[keep], ids[keep]
         if qs.exclude:
             keep = ~np.isin(ids, qs.excl())
             if not keep.all():

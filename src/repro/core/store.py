@@ -10,6 +10,13 @@ than a hard-wired ``FStore``:
                                          coalesce adjacent blocks)
     * ``read_attrs`` / ``write_attrs``   JSON metadata (``info`` group)
     * ``write_node(level, node, emb, ids)``
+    * ``append_rows(level, node, emb, ids)``   grow a node in place (leaf
+                                         appends of the streaming build and
+                                         ``ECPIndex.insert``)
+    * ``delete_rows(level, node, drop_ids)``   physically remove rows by id
+    * ``free_slot(level, node)``         release a node's storage; the node
+                                         id stays valid but empty (blob
+                                         slots return to the free list)
     * ``io``                             an ``IOStats`` counter
     * level 0, node 0 is the index root (``index_root`` in the file layout)
 
@@ -27,16 +34,33 @@ than a hard-wired ``FStore``:
 snapshot it around each traversal and thread the delta into
 ``SearchStats.io`` so file-vs-blob becomes a measurable axis.
 
-BlobStore on-disk format (``ecp-blob/1``)::
+BlobStore on-disk format::
 
   [0:8)    magic b"ECPBLOB1"
   [8:16)   uint64 LE header length H
   [16:16+H) JSON header: page_size, block_bytes, data_offset, dim,
             emb_dtype, ids_dtype, info (index metadata), levels
             (levels[lv] = per-node row counts; levels[0] = [root rows])
-  data_offset (page-aligned): one block per node, slot-ordered by
-            (level, node).  A block is n_rows embeddings (emb_dtype) then
-            n_rows ids (ids_dtype), zero-padded to block_bytes.
+  data_offset (page-aligned): one block per node.  A block is n_rows
+            embeddings (emb_dtype) then n_rows ids (ids_dtype),
+            zero-padded to block_bytes.
+
+Two header formats share the magic; the JSON ``format`` field versions them:
+
+  ``ecp-blob/1``  node -> physical slot is implicit: slots are ordered by
+            (level, node) and the file is exactly full.  Read-only in
+            structure: rows in an existing slot may be rewritten, but no
+            node can be added or released.
+  ``ecp-blob/2``  the mutable form (``convert()`` default): the header
+            additionally carries ``slots`` (a per-node physical-slot map,
+            -1 = released), ``free_slots`` (released physical slots,
+            reused by the next allocation), and ``n_slots`` (slots ever
+            allocated — the file's data region is n_slots blocks).  New
+            nodes appended by leaf splits take a free slot or grow the
+            file; ``block_bytes`` is sized so a full ``cluster_cap`` leaf
+            always fits.  A v1 file is upgraded to v2 in place the first
+            time a structural mutation needs the slot map (if its reserved
+            header page can hold the map — otherwise rebuild).
 """
 from __future__ import annotations
 
@@ -145,6 +169,15 @@ class Store(Protocol):
     def write_node(self, level: int, node: int, emb: np.ndarray, ids: np.ndarray) -> None:
         ...
 
+    def append_rows(self, level: int, node: int, emb: np.ndarray, ids: np.ndarray) -> None:
+        ...
+
+    def delete_rows(self, level: int, node: int, drop_ids: np.ndarray) -> int:
+        ...
+
+    def free_slot(self, level: int, node: int) -> None:
+        ...
+
     def close(self) -> None:
         ...
 
@@ -176,6 +209,7 @@ class FStoreBackend:
         self.fstore.io = self.io  # FStore counts json/chunk reads into it
         self.path = self.fstore.root
         self._dim: int | None = None
+        self._dtype: np.dtype | None = None
 
     def __getattr__(self, name):
         # hierarchy ops (read_array, create_group, listdir, exists, ...)
@@ -188,6 +222,11 @@ class FStoreBackend:
             self._dim = int(self.read_attrs(layout.INFO).get("dim", 0))
         return self._dim
 
+    def _node_dtype(self) -> np.dtype:
+        if self._dtype is None:
+            self._dtype = np.dtype(self.read_attrs(layout.INFO).get("dtype", "float16"))
+        return self._dtype
+
     # -------------------------------------------------------------- protocol
     def get_node(self, level: int, node: int) -> tuple[np.ndarray, np.ndarray]:
         g = _node_group(level, node)
@@ -199,6 +238,10 @@ class FStoreBackend:
             )
         emb = self.fstore.read_array(emb_path).astype(np.float32)  # f16 -> f32
         ids = self.fstore.read_array(f"{g}/{layout.IDS}")
+        if emb.shape[0] > ids.shape[0]:
+            # a torn append (emb grown, ids metadata not yet rewritten)
+            # must stay invisible: the node's row count IS len(ids)
+            emb = emb[: ids.shape[0]]
         return emb, ids
 
     def get_nodes(self, keys: list) -> list:
@@ -237,6 +280,45 @@ class FStoreBackend:
         self.fstore.write_array(f"{g}/{layout.EMB}", np.asarray(emb), chunk_rows=chunk_rows)
         self.fstore.write_array(f"{g}/{layout.IDS}", np.asarray(ids))
 
+    def append_rows(
+        self,
+        level: int,
+        node: int,
+        emb: np.ndarray,
+        ids: np.ndarray,
+        *,
+        chunk_rows: int | None = None,
+    ) -> None:
+        """Grow a node in place; only the trailing chunk of each array is
+        rewritten.  Creates the node when missing (the streaming build's
+        first touch of a leaf)."""
+        emb, ids = np.asarray(emb), np.asarray(ids)
+        if emb.shape[0] != ids.shape[0]:
+            raise ValueError(f"append_rows shape mismatch: emb {emb.shape} ids {ids.shape}")
+        g = _node_group(level, node)
+        if not self.fstore.is_group(g):
+            self.fstore.create_group(g)
+        # ids metadata is rewritten last: a torn append leaves extra emb
+        # rows invisible to get_node (which sizes the node by its ids)
+        self.fstore.append_rows(f"{g}/{layout.EMB}", emb, chunk_rows=chunk_rows)
+        self.fstore.append_rows(f"{g}/{layout.IDS}", ids)
+
+    def delete_rows(self, level: int, node: int, drop_ids: np.ndarray) -> int:
+        """Physically remove the rows whose ids are in ``drop_ids``."""
+        emb, ids = self.get_node(level, node)
+        if len(ids) == 0:
+            return 0
+        keep = ~np.isin(ids, np.asarray(drop_ids, ids.dtype))
+        removed = int((~keep).sum())
+        if removed:
+            self.write_node(level, node, emb[keep].astype(self._node_dtype()), ids[keep])
+        return removed
+
+    def free_slot(self, level: int, node: int) -> None:
+        """Release a node's storage (the group vanishes from the
+        hierarchy); the node id stays addressable and reads as empty."""
+        self.fstore.delete(_node_group(level, node))
+
     def close(self) -> None:
         pass
 
@@ -249,9 +331,12 @@ def _align(n: int, page: int) -> int:
 class BlobStore:
     """Page-aligned single-file backend: one ``pread`` per node.
 
-    Read-only by design except ``write_node`` over an existing slot (the
-    new node data must fit the fixed block size).  Build the file from any
-    other store with ``convert()``.
+    A v2 blob (``convert()`` default) is mutable: nodes can be rewritten,
+    grown (``append_rows``), added (``write_node`` at the level's next
+    index — leaf splits), or released (``free_slot``, slot returned to the
+    header's free list).  A v1 blob allows only in-slot rewrites; the
+    first structural mutation upgrades it to v2 in place when the reserved
+    header page can hold the slot map.
     """
 
     backend = "blob"
@@ -280,6 +365,7 @@ class BlobStore:
         self.io.count(16 + int(hlen), files=1, reads=2)
         self._header = json.loads(raw.decode("utf-8"))
         h = self._header
+        self.format = 2 if str(h.get("format", "ecp-blob/1")).endswith("/2") else 1
         self.page_size = int(h["page_size"])
         self.block_bytes = int(h["block_bytes"])
         self.data_offset = int(h["data_offset"])
@@ -288,19 +374,42 @@ class BlobStore:
         self.ids_dtype = zarr_to_dtype(h["ids_dtype"])
         # levels[lv] = list of per-node row counts; levels[0] = [root rows]
         self._n_rows: list[list[int]] = [list(map(int, lv)) for lv in h["levels"]]
-        self._slot0 = np.cumsum([0] + [len(lv) for lv in self._n_rows]).tolist()
+        if self.format >= 2:
+            self._slots: list[list[int]] = [list(map(int, lv)) for lv in h["slots"]]
+            self._free: list[int] = sorted(int(s) for s in h.get("free_slots", []))
+            self._n_slots = int(h["n_slots"])
+        else:
+            # v1: physical slots are implicitly (level, node)-ordered
+            at = 0
+            self._slots = []
+            for lv in self._n_rows:
+                self._slots.append(list(range(at, at + len(lv))))
+                at += len(lv)
+            self._free = []
+            self._n_slots = at
         self._row_bytes = self.dim * self.emb_dtype.itemsize + self.ids_dtype.itemsize
-        self._lock = threading.Lock()  # serializes header rewrites only
+        # re-entrant: append_rows/delete_rows hold it across their whole
+        # read-modify-write, and call write_node (which takes it) inside
+        self._lock = threading.RLock()
 
     # ---------------------------------------------------------------- layout
-    def _slot(self, level: int, node: int) -> int:
+    @property
+    def capacity_rows(self) -> int:
+        """Rows one fixed-size block can hold (the hard per-node bound the
+        lifecycle's split threshold must respect)."""
+        return self.block_bytes // self._row_bytes
+
+    def _check_key(self, level: int, node: int) -> None:
         if not (0 <= level < len(self._n_rows)):
             raise KeyError(f"no such level in blob: {level}")
         if not (0 <= node < len(self._n_rows[level])):
             raise KeyError(f"no such node in blob: lvl {level} node {node}")
         if level == 0 and node != 0:
             raise KeyError("level 0 has only the root node")
-        return self._slot0[level] + node
+
+    def _slot(self, level: int, node: int) -> int:
+        self._check_key(level, node)
+        return self._slots[level][node]
 
     def _offset(self, slot: int) -> int:
         return self.data_offset + slot * self.block_bytes
@@ -315,24 +424,31 @@ class BlobStore:
         ids = np.frombuffer(buf, self.ids_dtype, count=n_rows, offset=eb).copy()
         return emb, ids
 
+    def _empty(self) -> tuple[np.ndarray, np.ndarray]:
+        return np.zeros((0, self.dim), np.float32), np.zeros((0,), self.ids_dtype)
+
     # -------------------------------------------------------------- protocol
     def get_node(self, level: int, node: int) -> tuple[np.ndarray, np.ndarray]:
-        slot = self._slot(level, node)
+        self._check_key(level, node)
         n_rows = self._n_rows[level][node]
         if n_rows == 0:
-            return np.zeros((0, self.dim), np.float32), np.zeros((0,), self.ids_dtype)
+            return self._empty()
         need = n_rows * self._row_bytes
-        buf = os.pread(self._fd, need, self._offset(slot))
+        buf = os.pread(self._fd, need, self._offset(self._slots[level][node]))
         self.io.count(need, reads=1)
         return self._parse_block(buf, n_rows)
 
     def get_nodes(self, keys: list) -> list:
         """Batched read; runs of adjacent slots coalesce into one pread."""
+        out: list = [None] * len(keys)
         slots = []
         for i, (lv, nd) in enumerate(keys):
-            slots.append((self._slot(lv, nd), self._n_rows[lv][nd], i))
+            self._check_key(lv, nd)
+            if self._n_rows[lv][nd] == 0:
+                out[i] = self._empty()
+            else:
+                slots.append((self._slots[lv][nd], self._n_rows[lv][nd], i))
         slots.sort()
-        out: list = [None] * len(keys)
         j = 0
         while j < len(slots):
             # grow a run of consecutive slots
@@ -342,23 +458,12 @@ class BlobStore:
             first_slot = slots[j][0]
             last_slot, last_rows, _ = slots[r]
             need = (last_slot - first_slot) * self.block_bytes + last_rows * self._row_bytes
-            if need > 0:
-                buf = os.pread(self._fd, need, self._offset(first_slot))
-                self.io.count(need, reads=1)
-            else:
-                buf = b""
+            buf = os.pread(self._fd, need, self._offset(first_slot))
+            self.io.count(need, reads=1)
             for s in range(j, r + 1):
                 slot, n_rows, i = slots[s]
                 rel = (slot - first_slot) * self.block_bytes
-                if n_rows == 0:
-                    out[i] = (
-                        np.zeros((0, self.dim), np.float32),
-                        np.zeros((0,), self.ids_dtype),
-                    )
-                else:
-                    out[i] = self._parse_block(
-                        buf[rel : rel + n_rows * self._row_bytes], n_rows
-                    )
+                out[i] = self._parse_block(buf[rel : rel + n_rows * self._row_bytes], n_rows)
             j = r + 1
         return out
 
@@ -379,11 +484,38 @@ class BlobStore:
                 f"blob store only holds '{layout.INFO}' attributes, not {path!r}"
             )
         with self._lock:
+            old = self._header
+            self._header = dict(old)
             self._header["info"] = dict(attrs)
-            self._rewrite_header_locked()
+            try:
+                self._rewrite_header_locked()
+            except ValueError:
+                # an oversized header (e.g. a huge tombstone list) raises
+                # BEFORE any byte is written; in-memory state must agree
+                # with the disk, so the old attrs come back
+                self._header = old
+                raise
+
+    def _prep_rows(self, emb, ids) -> tuple[np.ndarray, np.ndarray, bytes]:
+        emb = np.ascontiguousarray(np.asarray(emb), dtype=self.emb_dtype)
+        ids = np.ascontiguousarray(np.asarray(ids), dtype=self.ids_dtype)
+        if emb.ndim != 2 or emb.shape[1] != self.dim or emb.shape[0] != ids.shape[0]:
+            raise ValueError(
+                f"write_node shape mismatch: emb {emb.shape} ids {ids.shape} dim {self.dim}"
+            )
+        need = emb.shape[0] * self._row_bytes
+        if need > self.block_bytes:
+            raise ValueError(
+                f"node data ({need} B) exceeds the fixed block size "
+                f"({self.block_bytes} B = {self.capacity_rows} rows); split the "
+                "node first or rebuild the blob with convert()"
+            )
+        block = emb.tobytes() + ids.tobytes()
+        return emb, ids, block + b"\0" * (self.block_bytes - len(block))
 
     def write_node(self, level: int, node: int, emb: np.ndarray, ids: np.ndarray) -> None:
-        """In-place node update (new data must fit the fixed block).
+        """In-place node update; ``node == len(level)`` appends a new node
+        (v2: slot from the free list, else the file grows by one block).
 
         NOT crash-atomic: the block and header are two in-place writes, so
         a crash between them can leave a stale row count over new bytes.
@@ -393,34 +525,174 @@ class BlobStore:
         """
         if not self._writable:
             raise PermissionError(f"blob store opened read-only: {self.path}")
-        emb = np.ascontiguousarray(np.asarray(emb), dtype=self.emb_dtype)
-        ids = np.ascontiguousarray(np.asarray(ids), dtype=self.ids_dtype)
-        if emb.ndim != 2 or emb.shape[1] != self.dim or emb.shape[0] != ids.shape[0]:
-            raise ValueError(
-                f"write_node shape mismatch: emb {emb.shape} ids {ids.shape} dim {self.dim}"
-            )
+        emb, ids, block = self._prep_rows(emb, ids)
         n_rows = emb.shape[0]
-        need = n_rows * self._row_bytes
-        if need > self.block_bytes:
-            raise ValueError(
-                f"node data ({need} B) exceeds the fixed block size "
-                f"({self.block_bytes} B); rebuild the blob with convert()"
-            )
-        slot = self._slot(level, node)
-        block = emb.tobytes() + ids.tobytes()
-        block += b"\0" * (self.block_bytes - len(block))
         with self._lock:
+            if not (0 <= level < len(self._n_rows)):
+                raise KeyError(f"no such level in blob: {level}")
+            n_level = len(self._n_rows[level])
+            if level == 0 and node != 0:
+                raise KeyError("level 0 has only the root node")
+            if node == n_level:
+                # structural append: nodes are numbered densely per level
+                slot, commit = self._alloc_slot_locked(level, node, n_rows)
+            elif 0 <= node < n_level:
+                slot = self._slots[level][node]
+                if slot < 0:  # rewriting a released node re-allocates storage
+                    slot, commit = self._alloc_slot_locked(level, node, n_rows)
+                else:
+                    def commit() -> None:
+                        self._n_rows[level][node] = n_rows
+                        self._rewrite_header_locked()
+            else:
+                raise KeyError(
+                    f"blob nodes are dense per level: next node of lvl {level} "
+                    f"is {n_level}, got {node}"
+                )
             os.pwrite(self._fd, block, self._offset(slot))
-            self._n_rows[level][node] = n_rows
-            self._rewrite_header_locked()
+            commit()
 
-    def _rewrite_header_locked(self) -> None:
-        self._header["levels"] = self._n_rows
-        raw = json.dumps(self._header, sort_keys=True).encode("utf-8")
+    def _v2_candidate_locked(self, rows, slots, free, n_slots) -> tuple[bytes, dict]:
+        """Serialize a CANDIDATE v2 header (nothing mutates; an oversized
+        header raises here with file and in-memory maps untouched).  Both
+        structural mutators build their candidates through this one place
+        so the header schema cannot diverge between them."""
+        header = dict(self._header)
+        header["format"] = "ecp-blob/2"
+        header["levels"] = rows
+        header["slots"] = slots
+        header["free_slots"] = free
+        header["n_slots"] = n_slots
+        raw = self._check_fits(json.dumps(header, sort_keys=True).encode("utf-8"))
+        return raw, header
+
+    def _install_v2_locked(self, raw: bytes, header: dict) -> None:
+        """Adopt a candidate header (in memory + on disk)."""
+        self.format = 2
+        self._header = header
+        self._n_rows = header["levels"]
+        self._slots = header["slots"]
+        self._free = header["free_slots"]
+        self._n_slots = header["n_slots"]
+        self._pwrite_header_locked(raw)
+
+    def ensure_capacity(self, level: int, new_nodes: int) -> None:
+        """Raise — without writing or mutating anything — if appending
+        ``new_nodes`` nodes at ``level`` could not fit the reserved header
+        region (covers the v1→v2 upgrade too).  Multi-node mutations
+        (leaf splits) pre-flight through this so a mid-sequence header
+        overflow can never strand already-written nodes."""
+        if new_nodes <= 0:
+            return
+        with self._lock:
+            if not (0 <= level < len(self._n_rows)):
+                raise KeyError(f"no such level in blob: {level}")
+            cand_slots = [list(lv) for lv in self._slots]
+            cand_rows = [list(lv) for lv in self._n_rows]
+            free = list(self._free)
+            n_slots = self._n_slots
+            for _ in range(new_nodes):
+                slot = free.pop(0) if free else n_slots
+                n_slots = max(n_slots, slot + 1)
+                cand_slots[level].append(slot)
+                cand_rows[level].append(0)
+            self._v2_candidate_locked(cand_rows, cand_slots, free, n_slots)
+
+    def _alloc_slot_locked(self, level: int, node: int, n_rows: int):
+        """Pick a physical slot for a new/re-allocated node; the returned
+        commit closure installs the pre-serialized candidate header after
+        the block write succeeds."""
+        new_node = node == len(self._n_rows[level])
+        slot = self._free[0] if self._free else self._n_slots
+        cand_slots = [list(lv) for lv in self._slots]
+        cand_rows = [list(lv) for lv in self._n_rows]
+        if new_node:
+            cand_slots[level].append(slot)
+            cand_rows[level].append(n_rows)
+        else:
+            cand_slots[level][node] = slot
+            cand_rows[level][node] = n_rows
+        raw, header = self._v2_candidate_locked(
+            cand_rows,
+            cand_slots,
+            [s for s in self._free if s != slot],
+            max(self._n_slots, slot + 1),
+        )
+        return slot, lambda: self._install_v2_locked(raw, header)
+
+    def append_rows(self, level: int, node: int, emb: np.ndarray, ids: np.ndarray) -> None:
+        """Grow a node in place.  The block layout is emb-rows-then-ids, so
+        growing rewrites the whole block (one pread + one pwrite); the
+        lock is held across the read-modify-write so concurrent appends
+        cannot lose each other's rows."""
+        with self._lock:
+            old_emb, old_ids = self.get_node(level, node)
+            emb = np.concatenate(
+                [old_emb.astype(self.emb_dtype), np.asarray(emb, self.emb_dtype)]
+            )
+            ids = np.concatenate([old_ids, np.asarray(ids, self.ids_dtype)])
+            self.write_node(level, node, emb, ids)
+
+    def delete_rows(self, level: int, node: int, drop_ids: np.ndarray) -> int:
+        with self._lock:
+            emb, ids = self.get_node(level, node)
+            if len(ids) == 0:
+                return 0
+            keep = ~np.isin(ids, np.asarray(drop_ids, ids.dtype))
+            removed = int((~keep).sum())
+            if removed:
+                self.write_node(level, node, emb[keep], ids[keep])
+            return removed
+
+    def free_slot(self, level: int, node: int) -> None:
+        """Release a node's block back to the free list; the node id stays
+        valid and reads as empty until something is written to it again."""
+        if not self._writable:
+            raise PermissionError(f"blob store opened read-only: {self.path}")
+        with self._lock:
+            self._check_key(level, node)
+            slot = self._slots[level][node]
+            if slot < 0 and self._n_rows[level][node] == 0:
+                return
+            cand_slots = [list(lv) for lv in self._slots]
+            cand_rows = [list(lv) for lv in self._n_rows]
+            cand_slots[level][node] = -1
+            cand_rows[level][node] = 0
+            raw, header = self._v2_candidate_locked(
+                cand_rows,
+                cand_slots,
+                sorted(set(self._free) | ({slot} if slot >= 0 else set())),
+                self._n_slots,
+            )
+            self._install_v2_locked(raw, header)
+
+    def _check_fits(self, raw: bytes) -> bytes:
         if 16 + len(raw) > self.data_offset:
-            raise ValueError("blob header grew past the data region; rebuild with convert()")
+            raise ValueError(
+                "blob header grew past the data region (more tombstones or "
+                "nodes than the reserved header pages can hold); compact() "
+                "the index or rebuild the blob with convert()"
+            )
+        return raw
+
+    def _pwrite_header_locked(self, raw: bytes) -> None:
+        """THE header write: every path (row updates, slot allocation,
+        free_slot, attrs) funnels through here so padding/length framing
+        can never diverge."""
         pad = b" " * (self.data_offset - 16 - len(raw))
         os.pwrite(self._fd, BLOB_MAGIC + len(raw).to_bytes(8, "little") + raw + pad, 0)
+
+    def _serialize_header_locked(self) -> bytes:
+        self._header["levels"] = self._n_rows
+        if self.format >= 2:
+            self._header["format"] = "ecp-blob/2"
+            self._header["slots"] = self._slots
+            self._header["free_slots"] = self._free
+            self._header["n_slots"] = self._n_slots
+        return self._check_fits(json.dumps(self._header, sort_keys=True).encode("utf-8"))
+
+    def _rewrite_header_locked(self) -> None:
+        self._pwrite_header_locked(self._serialize_header_locked())
 
     def close(self) -> None:
         if getattr(self, "_fd", -1) >= 0:
@@ -439,13 +711,21 @@ def convert(
     dst: str | os.PathLike,
     *,
     page_size: int = 4096,
+    format: int = 2,
 ) -> Path:
     """Serialize any ``Store``'s index into a page-aligned blob file.
 
     Returns the path of the written blob.  Embeddings are stored in the
     index's own storage dtype (``info['dtype']``, e.g. float16) so reads
     are bit-identical with the source backend's ``get_node``.
+
+    ``format=2`` (default) writes the mutable header (slot map + free
+    list) and sizes blocks so a full ``cluster_cap`` leaf fits — the form
+    ``ECPIndex.insert``/``delete``/``compact`` require.  ``format=1``
+    writes the legacy fixed-layout header.
     """
+    if format not in (1, 2):
+        raise ValueError(f"unknown blob format: {format!r} (1|2)")
     store = src if isinstance(src, Store) else open_store(src)
     info = store.read_attrs(layout.INFO)
     if not info:
@@ -462,6 +742,10 @@ def convert(
     n_rows: list[list[int]] = [[] for _ in range(levels + 1)]
     row_bytes = dim * emb_dt.itemsize + ids_dt.itemsize
     max_block = page_size
+    if format >= 2:
+        # a mutable blob must fit any legal leaf: inserts grow a leaf up to
+        # cluster_cap rows before the lifecycle splits it
+        max_block = max(max_block, int(info.get("cluster_cap", 0)) * row_bytes)
 
     dst = Path(dst)
     if dst.is_dir():
@@ -484,7 +768,7 @@ def convert(
     block_bytes = _align(max_block, page_size)
 
     header = {
-        "format": "ecp-blob/1",
+        "format": f"ecp-blob/{format}",
         "page_size": page_size,
         "block_bytes": block_bytes,
         "dim": dim,
@@ -493,10 +777,27 @@ def convert(
         "info": dict(info),
         "levels": n_rows,
     }
-    # reserve one spare page so in-place header rewrites (write_node row
-    # count changes) never collide with the data region
+    if format >= 2:
+        at = 0
+        slots = []
+        for lv in n_rows:
+            slots.append(list(range(at, at + len(lv))))
+            at += len(lv)
+        header["slots"] = slots
+        header["free_slots"] = []
+        header["n_slots"] = at
+    # reserve spare pages so in-place header rewrites never collide with
+    # the data region: one page for row-count churn (v1) plus, for the
+    # mutable format, room for the slot map / free list to grow as splits
+    # append nodes AND for the tombstone list (info.deleted_ids) — budgeted
+    # at every item deleted at once, ~12 JSON bytes per id.  Deleting past
+    # that budget raises cleanly (compact() shrinks the list to zero).
     raw = json.dumps(header, sort_keys=True).encode("utf-8")
-    data_offset = _align(16 + len(raw), page_size) + page_size
+    slack = page_size
+    if format >= 2:
+        slack += _align(len(keys) * 16 + page_size, page_size)
+        slack += _align(int(info.get("n_items", 0)) * 12 + page_size, page_size)
+    data_offset = _align(16 + len(raw), page_size) + slack
     header["data_offset"] = data_offset
     raw = json.dumps(header, sort_keys=True).encode("utf-8")
 
@@ -682,8 +983,28 @@ class AsyncPrefetchStore:
     def write_attrs(self, path: str, attrs: dict) -> None:
         self.inner.write_attrs(path, attrs)
 
+    def _invalidate(self, level: int, node: int) -> None:
+        """Drop an in-flight prefetch of a node that is being rewritten —
+        otherwise its stale payload could satisfy a later demand read."""
+        f = self._pop((level, node))
+        if f is not None:
+            f.cancel()
+
     def write_node(self, level: int, node: int, emb, ids, **kw) -> None:
+        self._invalidate(level, node)
         self.inner.write_node(level, node, emb, ids, **kw)
+
+    def append_rows(self, level: int, node: int, emb, ids, **kw) -> None:
+        self._invalidate(level, node)
+        self.inner.append_rows(level, node, emb, ids, **kw)
+
+    def delete_rows(self, level: int, node: int, drop_ids) -> int:
+        self._invalidate(level, node)
+        return self.inner.delete_rows(level, node, drop_ids)
+
+    def free_slot(self, level: int, node: int) -> None:
+        self._invalidate(level, node)
+        self.inner.free_slot(level, node)
 
     def close(self) -> None:
         with self._lock:

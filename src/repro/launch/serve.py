@@ -9,6 +9,12 @@ TPU mode).  Continuations are tracked as ``Query`` handles behind integer
 session ids; closing a session frees its state and later use raises
 ``QueryClosedError`` — not a silent crash.
 
+When the searcher is a ``MutableIndex`` (file-mode eCP-FS), the server
+also exposes the write path: ``insert`` / ``delete`` apply while read
+sessions stay valid (inserts append, deletes tombstone); ``compact``
+rewrites the tree, after which resuming a pre-compaction session raises
+``StaleQueryError`` — the client re-issues the search.
+
   PYTHONPATH=src python -m repro.launch.serve --demo
 """
 from __future__ import annotations
@@ -21,6 +27,7 @@ import numpy as np
 
 from repro.core import (
     ECPBuildConfig,
+    MutableIndex,
     QueryClosedError,
     ResultSet,
     Searcher,
@@ -35,17 +42,25 @@ from repro.data import clustered_vectors
 class ServeStats:
     queries: int = 0
     continuations: int = 0
+    inserts: int = 0
+    deletes: int = 0
+    compactions: int = 0
     latencies_ms: list = field(default_factory=list)
 
     def summary(self) -> dict:
         lat = sorted(self.latencies_ms)
         n = len(lat)
-        return {
+        out = {
             "queries": self.queries,
             "continuations": self.continuations,
             "p50_ms": lat[n // 2] if n else None,
             "p99_ms": lat[int(n * 0.99)] if n else None,
         }
+        if self.inserts or self.deletes or self.compactions:
+            out.update(
+                inserts=self.inserts, deletes=self.deletes, compactions=self.compactions
+            )
+        return out
 
 
 class Server:
@@ -95,6 +110,49 @@ class Server:
     def open_sessions(self) -> int:
         return len(self._sessions)
 
+    # ------------------------------------------------------------ mutation
+    def _mutable(self) -> MutableIndex:
+        s = self.searcher
+        if not isinstance(s, MutableIndex):
+            raise TypeError(
+                f"{type(s).__name__} is not a MutableIndex; the write path "
+                "needs a file-mode eCP index (open_index(mode='file'))"
+            )
+        return s
+
+    def insert(self, vectors, ids=None) -> dict:
+        """Ingest vectors while serving; open sessions stay valid."""
+        r = self._mutable().insert(vectors, ids)
+        self.stats.inserts += r["inserted"]
+        return r
+
+    def delete(self, ids) -> int:
+        """Tombstone items; results filter them immediately."""
+        n = self._mutable().delete(ids)
+        self.stats.deletes += n
+        return n
+
+    def compact(self) -> dict:
+        """Rewrite the index; pre-compaction sessions turn stale (resuming
+        one raises StaleQueryError) but stay registered until closed."""
+        r = self._mutable().compact()
+        self.stats.compactions += 1
+        return r
+
+    def shutdown(self) -> None:
+        """Close every open session and the searcher itself."""
+        for sid in list(self._sessions):
+            self.close(sid)
+        close = getattr(self.searcher, "close", None)
+        if close is not None:
+            close()
+
+    def __enter__(self) -> "Server":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
 
 def demo(backend: str = "fstore") -> None:
     import tempfile
@@ -114,21 +172,29 @@ def demo(backend: str = "fstore") -> None:
             path if backend == "fstore" else blob,
             mode="file", backend=backend, cache_max_nodes=64,
         )
-        srv = Server(idx)
-        sids = [srv.search(q, k=20, b=8)[1] for q in qs]
-        for sid in sids[:8]:
-            srv.more(sid, k=20)
-        for sid in sids:
-            srv.close(sid)
-        print(f"interactive[{backend}]:", srv.stats.summary())
-        print("  store io:", idx.store.io.as_dict())
+        with Server(idx) as srv:  # shutdown() closes sessions + the index
+            sids = [srv.search(q, k=20, b=8)[1] for q in qs]
+            for sid in sids[:8]:
+                srv.more(sid, k=20)
+            for sid in sids:
+                srv.close(sid)
+
+            # the write path: ingest + tombstone while serving, then compact
+            new = data[:64] + 0.02 * rng.normal(size=(64, 128)).astype(np.float32)
+            srv.insert(new, np.arange(len(data), len(data) + 64))
+            srv.delete(np.arange(0, 500, 7))
+            hit = srv.search(new[0], k=5, b=8)[0]
+            assert len(data) in hit.row_ids(0), "inserted item must be findable"
+            print(f"compacted: {srv.compact()}")
+            print(f"interactive[{backend}]:", srv.stats.summary())
+            print("  store io:", idx.store.io.as_dict())
 
         # batched: same Server, device searcher, whole batch per tick
-        bsrv = Server(open_index(path, mode="packed"))
-        rs, sid = bsrv.search(qs, k=20, b=8)
-        bsrv.more(sid, k=20)
-        bsrv.close(sid)
-        print("batched:    ", bsrv.stats.summary())
+        with Server(open_index(path, mode="packed")) as bsrv:
+            rs, sid = bsrv.search(qs, k=20, b=8)
+            bsrv.more(sid, k=20)
+            bsrv.close(sid)
+            print("batched:    ", bsrv.stats.summary())
 
 
 if __name__ == "__main__":

@@ -1,0 +1,542 @@
+"""Index lifecycle (core/lifecycle.py): streaming out-of-core build,
+incremental insert/delete with leaf splits, tombstone filtering in both
+traversal engines, and compaction bit-identity against a fresh rebuild —
+on both storage backends."""
+import gc
+import shutil
+import weakref
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ECPBuildConfig,
+    MultiIndexSession,
+    MutableIndex,
+    StaleQueryError,
+    build_index,
+    build_index_streaming,
+    convert,
+    load_packed,
+    open_index,
+    reservoir_sample,
+)
+from repro.core import layout
+from repro.data import clustered_vectors
+
+N, DIM, CAP = 3000, 16, 64
+CFG = ECPBuildConfig(levels=2, cluster_cap=CAP, seed=3, insert_batch=1024)
+
+
+@pytest.fixture(scope="module")
+def base(tmp_path_factory):
+    """A built index (fstore + blob) that tests copy before mutating."""
+    data, _ = clustered_vectors(0, n=N, dim=DIM, n_clusters=24)
+    root = tmp_path_factory.mktemp("lifecycle")
+    build_index(data, str(root / "idx"), CFG)
+    blob = convert(root / "idx", root / "idx.blob")
+    return data, root, str(root / "idx"), str(blob)
+
+
+def _copy(base, tmp_path, backend):
+    """A private mutable copy of the base index for one test."""
+    _, _, fpath, bpath = base
+    if backend == "fstore":
+        dst = tmp_path / "idx"
+        shutil.copytree(fpath, dst)
+        return str(dst)
+    dst = tmp_path / "idx.blob"
+    shutil.copyfile(bpath, dst)
+    return str(dst)
+
+
+# ------------------------------------------------------------ streaming build
+def test_streaming_build_bit_identical_to_one_shot(base, tmp_path):
+    data, _, fpath, _ = base
+
+    def chunks():  # odd chunk size on purpose: boundaries must not matter
+        for lo in range(0, N, 517):
+            yield data[lo : lo + 517]
+
+    s2 = build_index_streaming(chunks, str(tmp_path / "st"), CFG)
+    s1 = open_index(fpath, mode="file").store
+    info = layout.IndexInfo.from_attrs(s1.read_attrs(layout.INFO))
+    assert info == layout.IndexInfo.from_attrs(s2.read_attrs(layout.INFO))
+    keys = [(0, 0)] + [
+        (lv, nd)
+        for lv in range(1, info.levels + 1)
+        for nd in range(info.nodes_per_level[lv - 1])
+    ]
+    for k in keys:
+        e1, i1 = s1.get_node(*k)
+        e2, i2 = s2.get_node(*k)
+        np.testing.assert_array_equal(e1, e2, err_msg=str(k))
+        np.testing.assert_array_equal(i1, i2, err_msg=str(k))
+    np.testing.assert_array_equal(
+        s1.read_array(layout.REP_EMB), s2.read_array(layout.REP_EMB)
+    )
+    np.testing.assert_array_equal(
+        s1.read_array(layout.REP_IDS), s2.read_array(layout.REP_IDS)
+    )
+
+
+def test_streaming_build_spools_one_shot_iterators(base, tmp_path):
+    data, _, fpath, _ = base
+    gen = (data[lo : lo + 700] for lo in range(0, N, 700))  # single-pass
+    s2 = build_index_streaming(gen, str(tmp_path / "sp"), CFG)
+    s1 = open_index(fpath, mode="file").store
+    info = layout.IndexInfo.from_attrs(s1.read_attrs(layout.INFO))
+    for j in range(info.nodes_per_level[-1]):
+        e1, i1 = s1.get_node(info.levels, j)
+        e2, i2 = s2.get_node(info.levels, j)
+        np.testing.assert_array_equal(e1, e2)
+        np.testing.assert_array_equal(i1, i2)
+
+
+def test_streaming_build_does_not_retain_chunks(tmp_path):
+    """Peak memory is O(chunk + leaders): consumed chunk arrays must be
+    collectable immediately, never all resident."""
+    data, _ = clustered_vectors(1, n=2000, dim=DIM, n_clusters=16)
+    refs = []
+
+    def chunks():
+        for lo in range(0, len(data), 250):
+            c = data[lo : lo + 250].copy()
+            refs.append(weakref.ref(c))
+            yield c
+
+    build_index_streaming(chunks, str(tmp_path / "mem"), CFG)
+    gc.collect()
+    alive = sum(r() is not None for r in refs)
+    assert alive <= 2, f"{alive}/{len(refs)} chunks still resident after the build"
+
+
+def test_streaming_build_explicit_ids_and_pair_chunks(tmp_path):
+    data, _ = clustered_vectors(2, n=800, dim=DIM, n_clusters=8)
+    ids = np.arange(800) * 7 + 3
+
+    def pair_chunks():
+        for lo in range(0, 800, 190):
+            yield data[lo : lo + 190], ids[lo : lo + 190]
+
+    store = build_index_streaming(pair_chunks, str(tmp_path / "pairs"), CFG)
+    info = layout.IndexInfo.from_attrs(store.read_attrs(layout.INFO))
+    seen = []
+    for j in range(info.nodes_per_level[-1]):
+        seen.extend(store.get_node(info.levels, j)[1].tolist())
+    assert sorted(seen) == sorted(ids.tolist())
+
+
+def test_reservoir_sample_uniform_without_replacement():
+    data = np.arange(400, dtype=np.float32).reshape(100, 4)
+    samp, pos, n = reservoir_sample((data[lo : lo + 17] for lo in range(0, 100, 17)), 20, seed=1)
+    assert n == 100 and samp.shape == (20, 4)
+    assert len(np.unique(pos)) == 20
+    np.testing.assert_array_equal(samp, data[pos])
+    # k > N degrades to the whole collection
+    samp, pos, n = reservoir_sample([data[:5]], 20, seed=1)
+    assert n == 5 and len(pos) == 5
+    with pytest.raises(ValueError):
+        reservoir_sample(iter([]), 4)
+
+
+def test_streaming_build_reservoir_mode(tmp_path):
+    data, _ = clustered_vectors(3, n=1500, dim=DIM, n_clusters=12)
+    store = build_index_streaming(
+        lambda: (data[lo : lo + 400] for lo in range(0, 1500, 400)),
+        str(tmp_path / "resv"),
+        CFG,
+        n_leaders=24,
+    )
+    info = layout.IndexInfo.from_attrs(store.read_attrs(layout.INFO))
+    assert info.n_leaders == 24
+    seen = []
+    for j in range(24):
+        seen.extend(store.get_node(info.levels, j)[1].tolist())
+    assert sorted(seen) == list(range(1500))
+
+
+# ----------------------------------------------------------- build edge cases
+def test_build_empty_collection_raises_clearly(tmp_path):
+    with pytest.raises(ValueError, match="empty collection"):
+        build_index(np.zeros((0, 8), np.float32), str(tmp_path / "e"), CFG)
+    with pytest.raises(ValueError, match="empty collection"):
+        build_index_streaming(iter([]), str(tmp_path / "e2"), CFG)
+
+
+def test_build_rejects_non_2d_and_bad_ids(tmp_path):
+    with pytest.raises(ValueError, match=r"\[N, D\]"):
+        build_index(np.zeros(8, np.float32), str(tmp_path / "x"))
+    data = np.random.default_rng(0).normal(size=(10, 8)).astype(np.float32)
+    with pytest.raises(ValueError, match="item_ids length"):
+        build_index(data, str(tmp_path / "y"), CFG, item_ids=np.arange(3))
+
+
+def test_build_cluster_cap_one_and_tiny_collections(tmp_path):
+    data = np.random.default_rng(0).normal(size=(20, 8)).astype(np.float32)
+    cfg = ECPBuildConfig(levels=2, cluster_cap=1, seed=0)
+    store = build_index(data, str(tmp_path / "cap1"), cfg)
+    info = layout.IndexInfo.from_attrs(store.read_attrs(layout.INFO))
+    assert info.n_leaders == 20
+    with open_index(str(tmp_path / "cap1"), mode="file") as idx:
+        assert idx.search(data[5], k=1, b=4).ids[0] == 5
+    # one item, cap larger than the collection
+    one = build_index(data[:1], str(tmp_path / "one"), ECPBuildConfig(levels=2, cluster_cap=100))
+    assert layout.IndexInfo.from_attrs(one.read_attrs(layout.INFO)).n_leaders == 1
+    with pytest.raises(ValueError, match="smaller than the requested leader count"):
+        build_index_streaming([data], str(tmp_path / "over"), cfg, n_leaders=50)
+
+
+# ------------------------------------------------------------------- inserts
+@pytest.mark.parametrize("backend", ["fstore", "blob"])
+def test_insert_findable_and_exactly_once(base, tmp_path, backend):
+    data, _, _, _ = base
+    path = _copy(base, tmp_path, backend)
+    rng = np.random.default_rng(8)
+    new = (data[rng.integers(0, N, 100)] + 0.05 * rng.normal(size=(100, DIM))).astype(np.float32)
+    with open_index(path, mode="file", backend=backend) as idx:
+        assert isinstance(idx, MutableIndex)
+        gen0 = idx.generation
+        r = idx.insert(new, np.arange(N, N + 100))
+        assert r["inserted"] == 100
+        assert idx.generation == gen0 + 1
+        assert idx.info.n_items == N + 100
+        for i in (0, 50, 99):
+            rs = idx.search(new[i], k=3, b=8)
+            assert N + i in rs.row_ids(0)
+        # the whole collection is present exactly once across leaves
+        info = idx.info
+        seen = []
+        for j in range(info.nodes_per_level[-1]):
+            seen.extend(idx.store.get_node(info.levels, j)[1].tolist())
+        assert sorted(seen) == list(range(N + 100))
+        # splits kept every touched leaf within cap
+        if r["splits"]:
+            rows = idx.store.node_rows(
+                [(info.levels, j) for j in range(info.nodes_per_level[-1])]
+            )
+            assert max(rows) <= max(
+                CAP, max(idx.store.node_rows([(info.levels, j) for j in range(24)]))
+            )
+
+
+def test_insert_splits_register_with_parent(base, tmp_path):
+    data, _, _, _ = base
+    path = _copy(base, tmp_path, "fstore")
+    with open_index(path, mode="file") as idx:
+        info0 = idx.info
+        # overfill one leaf deliberately: clone one stored vector cap times
+        leaf_emb, leaf_ids = idx.store.get_node(info0.levels, 0)
+        target = np.asarray(leaf_emb[0], np.float32)
+        n_add = CAP + 10
+        new = np.tile(target, (n_add, 1)) + 0.001 * np.random.default_rng(1).normal(
+            size=(n_add, DIM)
+        ).astype(np.float32)
+        r = idx.insert(new, np.arange(N, N + n_add))
+        assert r["splits"] >= 1
+        info1 = idx.info
+        assert info1.n_leaders > info0.n_leaders
+        assert info1.nodes_per_level[-1] == info1.n_leaders
+        # every leaf is reachable from exactly one parent, including the new ones
+        child_ids = []
+        for p in range(info1.nodes_per_level[0]):
+            child_ids.extend(idx.store.get_node(1, p)[1].tolist())
+        assert sorted(child_ids) == list(range(info1.n_leaders))
+        # nothing lost
+        seen = []
+        for j in range(info1.n_leaders):
+            seen.extend(idx.store.get_node(info1.levels, j)[1].tolist())
+        assert sorted(seen) == list(range(N + n_add))
+
+
+def test_insert_validation(base, tmp_path):
+    path = _copy(base, tmp_path, "fstore")
+    with open_index(path, mode="file") as idx:
+        with pytest.raises(ValueError, match="vectors must be"):
+            idx.insert(np.zeros((2, DIM + 1), np.float32))
+        with pytest.raises(ValueError, match="unique"):
+            idx.insert(np.zeros((2, DIM), np.float32), np.array([5, 5]))
+        r = idx.insert(np.zeros((0, DIM), np.float32))
+        assert r["inserted"] == 0
+
+
+# -------------------------------------------------------------------- deletes
+@pytest.mark.parametrize("backend", ["fstore", "blob"])
+@pytest.mark.parametrize("engine", ["flat", "legacy"])
+def test_delete_tombstones_filtered(base, tmp_path, backend, engine):
+    data, _, _, _ = base
+    path = _copy(base, tmp_path, backend)
+    del_ids = np.arange(0, N, 13)
+    with open_index(path, mode="file", backend=backend, engine=engine) as idx:
+        before = set(idx.search(data[13], k=30, b=16).row_ids(0))
+        assert before & set(del_ids.tolist())
+        n = idx.delete(del_ids)
+        assert n == len(del_ids)
+        assert idx.delete(del_ids) == 0  # idempotent
+        got = set(idx.search(data[13], k=30, b=16).row_ids(0))
+        assert not (got & set(del_ids.tolist())), f"{backend}/{engine} leaked a tombstone"
+    # tombstones persist: a fresh open still filters
+    with open_index(path, mode="file", backend=backend, engine=engine) as idx:
+        assert idx.tombstones == set(del_ids.tolist())
+        got = set(idx.search(data[13], k=30, b=16).row_ids(0))
+        assert not (got & set(del_ids.tolist()))
+
+
+def test_insert_resurrects_tombstoned_id(base, tmp_path):
+    data, _, _, _ = base
+    path = _copy(base, tmp_path, "fstore")
+    with open_index(path, mode="file") as idx:
+        idx.delete([N + 1, 42])
+        idx.insert(data[:2] + 0.3, np.array([N, N + 1]))
+        assert idx.tombstones == {42}
+        assert N + 1 in idx.search(data[1] + 0.3, k=3, b=8).row_ids(0)
+
+
+def test_resurrect_purges_old_row_and_compacts(base, tmp_path):
+    """Regression: delete(id) then insert(new_vec, id) must purge the OLD
+    physical row — otherwise the id exists twice (stale row searchable,
+    compact() rejects the duplicate forever)."""
+    data, _, _, _ = base
+    path = _copy(base, tmp_path, "fstore")
+    far = np.full(DIM, 40.0, np.float32)  # nowhere near data[5]
+    with open_index(path, mode="file") as idx:
+        idx.delete([5])
+        idx.insert(far[None, :], [5])
+        # the old embedding for id 5 must be gone: searching AT it misses
+        got = idx.search(data[5], k=10, b=64)
+        assert 5 not in got.row_ids(0), "stale pre-delete row still live"
+        assert 5 in idx.search(far, k=3, b=8).row_ids(0)
+        # exactly one physical row carries the id
+        count = sum(
+            int((idx.store.get_node(idx.info.levels, j)[1] == 5).sum())
+            for j in range(idx.info.nodes_per_level[-1])
+        )
+        assert count == 1
+        idx.compact()  # used to raise 'duplicate item ids'
+        assert 5 in idx.search(far, k=3, b=8).row_ids(0)
+
+
+def test_default_ids_never_collide_after_compact(base, tmp_path):
+    """Regression: default insert ids come from a monotonic next_id, not
+    n_items — compact() shrinks n_items but must never reissue live ids."""
+    data, _, _, _ = base
+    path = _copy(base, tmp_path, "fstore")
+    with open_index(path, mode="file") as idx:
+        idx.delete([3])
+        idx.compact()                      # n_items: N -> N-1; id N-1 lives
+        r = idx.insert(data[:1] + 0.5)     # default id must NOT be N-1
+        assert r["inserted"] == 1
+        assert idx.info.next_id == N + 1
+        seen = []
+        for j in range(idx.info.nodes_per_level[-1]):
+            seen.extend(idx.store.get_node(idx.info.levels, j)[1].tolist())
+        assert len(seen) == len(set(seen)), "default id collided with a live id"
+        idx.compact()                      # and the index stays compactable
+
+
+def test_load_packed_refuses_tombstoned_index(base, tmp_path):
+    path = _copy(base, tmp_path, "fstore")
+    with open_index(path, mode="file") as idx:
+        idx.delete([1, 2, 3])
+    with pytest.raises(ValueError, match="compact"):
+        load_packed(path)
+
+
+# ----------------------------------------------------------------- compaction
+@pytest.mark.parametrize("backend", ["fstore", "blob"])
+def test_compact_bit_identical_to_fresh_rebuild(base, tmp_path, backend):
+    """The acceptance criterion: streamed build + inserts + deletes +
+    compact() == one-shot build of the logical collection, bit for bit,
+    for both engines."""
+    data, _, _, _ = base
+    path = _copy(base, tmp_path, backend)
+    rng = np.random.default_rng(4)
+    n_ins = 150
+    new = (data[rng.integers(0, N, n_ins)] + 0.05 * rng.normal(size=(n_ins, DIM))).astype(
+        np.float32
+    )
+    new_ids = np.arange(N, N + n_ins)
+    del_ids = np.concatenate([rng.choice(N, 100, replace=False), new_ids[:20]])
+    with open_index(path, mode="file", backend=backend) as idx:
+        idx.insert(new, new_ids)
+        idx.delete(del_ids)
+        r = idx.compact()
+        assert r["purged"] == len(set(del_ids.tolist()))
+        assert idx.tombstones == set()
+        assert idx.info.n_items == r["live"]
+
+    # the logical collection: live (id, stored-f16 vector) pairs, id order
+    live = np.ones(N + n_ins, bool)
+    live[del_ids] = False
+    stored = np.concatenate([data, new]).astype(np.float16).astype(np.float32)
+    fresh_f = str(tmp_path / "fresh")
+    build_index(stored[live], fresh_f, CFG, item_ids=np.flatnonzero(live))
+    fresh = fresh_f if backend == "fstore" else str(convert(fresh_f, tmp_path / "fresh.blob"))
+
+    queries = data[rng.integers(0, N, 15)] + 0.01
+    for engine in ("flat", "legacy"):
+        with open_index(path, mode="file", backend=backend, engine=engine) as a, \
+             open_index(fresh, mode="file", backend=backend, engine=engine) as b:
+            for q in queries:
+                ra = a.search(q, k=20, b=8)
+                rb = b.search(q, k=20, b=8)
+                np.testing.assert_array_equal(ra.ids, rb.ids, err_msg=f"{backend}/{engine}")
+                np.testing.assert_array_equal(ra.dists, rb.dists, err_msg=f"{backend}/{engine}")
+
+
+def test_compact_of_everything_deleted_raises(base, tmp_path):
+    path = _copy(base, tmp_path, "fstore")
+    with open_index(path, mode="file") as idx:
+        idx.delete(np.arange(N))
+        with pytest.raises(ValueError, match="empty index"):
+            idx.compact()
+
+
+def test_compact_stales_open_queries_but_inserts_do_not(base, tmp_path):
+    data, _, _, _ = base
+    path = _copy(base, tmp_path, "fstore")
+    with open_index(path, mode="file") as idx:
+        rs = idx.search(data[7], k=10, b=4)
+        idx.insert(data[:1] + 0.2, [N])      # append-only: handle stays valid
+        idx.delete([3])                       # tombstone-only: still valid
+        assert len(rs.query.next(10)) > 0
+        idx.compact()
+        with pytest.raises(StaleQueryError):
+            rs.query.next(10)
+        # a new search works and reflects the compacted tree
+        rs2 = idx.search(data[7], k=10, b=4)
+        assert 3 not in rs2.row_ids(0)
+
+
+def test_insert_of_live_id_raises_before_writing(base, tmp_path):
+    """Regression: inserting an id that is already live must raise (not
+    silently create a duplicate that bricks compact())."""
+    data, _, _, _ = base
+    path = _copy(base, tmp_path, "fstore")
+    with open_index(path, mode="file") as idx:
+        with pytest.raises(ValueError, match="already live"):
+            idx.insert(data[:1] + 0.5, [5])
+        # nothing was written: the index still compacts and id 5 is unique
+        idx.compact()
+        count = sum(
+            int((idx.store.get_node(idx.info.levels, j)[1] == 5).sum())
+            for j in range(idx.info.nodes_per_level[-1])
+        )
+        assert count == 1
+
+
+def test_phantom_tombstone_does_not_skew_n_items(base, tmp_path):
+    """Regression: delete(absent id) then insert(that id) must count
+    n_items by rows actually purged (none), not tombstone membership."""
+    data, _, _, _ = base
+    path = _copy(base, tmp_path, "fstore")
+    with open_index(path, mode="file") as idx:
+        idx.delete([999_999])                # phantom: never existed
+        idx.insert(data[:1] + 0.5, [999_999])
+        assert idx.info.n_items == N + 1     # used to stay N
+        rows = sum(
+            len(idx.store.get_node(idx.info.levels, j)[1])
+            for j in range(idx.info.nodes_per_level[-1])
+        )
+        assert rows == idx.info.n_items
+
+
+def test_blob_split_refuses_cleanly_when_parent_block_full(base, tmp_path):
+    """Regression: on the blob backend a split whose parent registration
+    cannot fit the fixed block must raise BEFORE any write — previously
+    it stranded the already-written new leaves outside the tree."""
+    import repro.core.lifecycle as lifecycle
+
+    data, _, _, _ = base
+    path = _copy(base, tmp_path, "blob")
+    with open_index(path, mode="file", backend="blob") as idx:
+        all_before = []
+        for j in range(idx.info.nodes_per_level[-1]):
+            all_before.extend(idx.store.get_node(idx.info.levels, j)[1].tolist())
+        target = idx.store.get_node(idx.info.levels, 0)[0][0]
+        new = np.tile(np.asarray(target, np.float32), (CAP + 10, 1))
+        orig = type(idx.store).capacity_rows
+        try:  # make the parent look full so the pre-flight must trip
+            type(idx.store).capacity_rows = property(lambda self: 8)
+            with pytest.raises(ValueError, match="compact"):
+                idx.insert(new, np.arange(N, N + CAP + 10))
+        finally:
+            type(idx.store).capacity_rows = orig
+        # no rows orphaned, no metadata half-applied
+        all_after = []
+        for j in range(idx.info.nodes_per_level[-1]):
+            all_after.extend(idx.store.get_node(idx.info.levels, j)[1].tolist())
+        assert sorted(all_after) == sorted(all_before)
+        assert idx.info.n_items == N
+
+
+def test_v1_blob_split_header_overflow_raises_before_any_write(tmp_path):
+    """Regression: a split that needs new slots on a v1 blob whose single
+    reserved header page cannot hold the upgraded slot map must raise
+    BEFORE the leaf is overwritten — previously it lost the leaf's rows
+    past part 0."""
+    data, _ = clustered_vectors(9, n=12_000, dim=16, n_clusters=64)
+    cfg = ECPBuildConfig(levels=2, cluster_cap=8, seed=0)  # ~1500 leaves
+    build_index(data, str(tmp_path / "big"), cfg)
+    blob = convert(tmp_path / "big", tmp_path / "big.blob", format=1)
+    with open_index(str(blob), mode="file", backend="blob") as idx:
+        assert idx.store.format == 1
+        target = idx.store.get_node(2, 0)[0][0]
+        new = np.tile(np.asarray(target, np.float32), (20, 1))
+        with pytest.raises(ValueError, match="header grew past"):
+            idx.insert(new, np.arange(12_000, 12_020))
+        # nothing was lost: every original row is still in exactly one leaf
+        seen: list = []
+        for lo in range(0, idx.info.nodes_per_level[-1], 256):
+            keys = [(2, j) for j in range(lo, min(lo + 256, idx.info.nodes_per_level[-1]))]
+            for _e, nids in idx.store.get_nodes(keys):
+                seen.extend(nids.tolist())
+        assert sorted(seen) == list(range(12_000))
+
+
+def test_refresh_resyncs_after_external_writer(base, tmp_path):
+    """session.invalidate / ECPIndex.refresh must pick up metadata, root,
+    and tombstones written by ANOTHER index handle on the same files."""
+    data, _, _, _ = base
+    path = _copy(base, tmp_path, "fstore")
+    with MultiIndexSession(cache_bytes=8 << 20) as sess:
+        reader = sess.open(path, name="r")
+        reader.search(data[1], k=5, b=8)  # warm caches + in-memory state
+        with open_index(path, mode="file") as writer:  # "another process"
+            writer.insert(data[:1] + 0.4, [N])
+            writer.delete([7])
+            writer.compact()
+        sess.invalidate("r")
+        assert reader.info.n_items == N  # N + 1 inserted - 1 deleted
+        assert N in reader.search(data[0] + 0.4, k=3, b=8).row_ids(0)
+        assert 7 not in reader.search(data[7], k=10, b=32).row_ids(0)
+
+
+# --------------------------------------------------- sessions, context mgmt
+def test_context_manager_closes_pool_and_store(base):
+    _, _, fpath, _ = base
+    with open_index(fpath, mode="file") as idx:
+        idx.prefetch(up_to_level=1)
+        assert idx._pool is not None
+        pool = idx._pool
+    assert idx._pool is None
+    assert pool._shutdown
+
+
+def test_session_shared_cache_invalidated_on_write(base, tmp_path):
+    data, _, _, _ = base
+    path = _copy(base, tmp_path, "fstore")
+    with MultiIndexSession(cache_bytes=8 << 20) as sess:
+        idx = sess.open(path, name="a")
+        rs0 = idx.search(data[5], k=5, b=8)
+        resident0 = sess.cache.n_resident
+        assert resident0 > 0
+        vec = data[5] + 0.02
+        idx.insert(vec[None, :], [N])
+        # rewritten nodes were dropped from the SHARED cache...
+        rs = idx.search(vec, k=3, b=8)
+        assert N in rs.row_ids(0), "stale shared cache hid the inserted item"
+        # ...and compaction clears the whole namespace
+        idx.compact()
+        assert not any(k[0] == "a" for k in sess.cache._d)
+        assert N in idx.search(vec, k=3, b=8).row_ids(0)

@@ -72,12 +72,15 @@ def test_blob_on_disk_format(built):
     assert raw[:8] == BLOB_MAGIC
     hlen = int(np.frombuffer(raw[8:16], "<u8")[0])
     header = json.loads(open(blob, "rb").read()[16 : 16 + hlen])
-    assert header["format"] == "ecp-blob/1"
+    assert header["format"] == "ecp-blob/2"  # convert() default: mutable form
     page = header["page_size"]
     assert header["data_offset"] % page == 0
     assert header["block_bytes"] % page == 0
-    # file size = data region end
+    # v2 carries the physical slot map; a fresh convert is exactly full
     n_slots = sum(len(lv) for lv in header["levels"])
+    assert header["n_slots"] == n_slots
+    assert header["free_slots"] == []
+    assert sorted(s for lv in header["slots"] for s in lv) == list(range(n_slots))
     assert os.path.getsize(blob) == header["data_offset"] + n_slots * header["block_bytes"]
     # info in the header matches the fstore's info attrs
     bs = BlobStore(blob)
@@ -296,3 +299,172 @@ def test_build_returns_protocol_store(built):
     assert emb.dtype == np.float32
     info = store.read_attrs(layout.INFO)
     assert len(ids) == int(info["nodes_per_level"][0])
+
+
+# -------------------------------------------------- mutation ops (lifecycle)
+def _mutable_copy(built, tmp_path, backend):
+    import shutil
+
+    _, path, blob = built
+    if backend == "fstore":
+        dst = tmp_path / "m_idx"
+        shutil.copytree(path, dst)
+        return open_store(str(dst))
+    dst = tmp_path / "m.blob"
+    shutil.copyfile(blob, dst)
+    return open_store(str(dst))
+
+
+@pytest.mark.parametrize("backend", ["fstore", "blob"])
+def test_append_rows_grows_a_node(built, tmp_path, backend):
+    s = _mutable_copy(built, tmp_path, backend)
+    e0, i0 = s.get_node(2, 3)
+    add_e = np.full((3, e0.shape[1]), 0.5, np.float16)
+    add_i = np.array([90001, 90002, 90003])
+    s.append_rows(2, 3, add_e, add_i)
+    e1, i1 = s.get_node(2, 3)
+    assert len(i1) == len(i0) + 3
+    np.testing.assert_array_equal(i1[: len(i0)], i0)
+    np.testing.assert_array_equal(i1[-3:], add_i)
+    np.testing.assert_array_equal(e1[: len(i0)], e0)
+    assert s.node_rows([(2, 3)]) == [len(i0) + 3]
+
+
+@pytest.mark.parametrize("backend", ["fstore", "blob"])
+def test_delete_rows_removes_by_id(built, tmp_path, backend):
+    s = _mutable_copy(built, tmp_path, backend)
+    e0, i0 = s.get_node(2, 1)
+    drop = i0[:2]
+    assert s.delete_rows(2, 1, drop) == 2
+    e1, i1 = s.get_node(2, 1)
+    assert len(i1) == len(i0) - 2
+    assert not set(drop.tolist()) & set(i1.tolist())
+    np.testing.assert_array_equal(e1, e0[2:])
+    assert s.delete_rows(2, 1, drop) == 0  # already gone
+
+
+@pytest.mark.parametrize("backend", ["fstore", "blob"])
+def test_free_slot_then_rewrite(built, tmp_path, backend):
+    s = _mutable_copy(built, tmp_path, backend)
+    dim = s.get_node(2, 2)[0].shape[1]
+    s.free_slot(2, 2)
+    e, i = s.get_node(2, 2)
+    assert len(i) == 0 and s.node_rows([(2, 2)]) == [0]
+    # batched reads skip the freed node cleanly
+    out = s.get_nodes([(2, 1), (2, 2), (2, 3)])
+    assert len(out[1][1]) == 0 and len(out[0][1]) > 0
+    # a freed node can be written again
+    s.write_node(2, 2, np.ones((2, dim), np.float16), np.array([7, 8]))
+    np.testing.assert_array_equal(s.get_node(2, 2)[1], [7, 8])
+
+
+def test_blob_new_node_allocation_and_free_list(built, tmp_path):
+    s = _mutable_copy(built, tmp_path, "blob")
+    n_leaf = len(s._n_rows[2])
+    dim = s.dim
+    # appending a node at the level's end grows the file
+    s.write_node(2, n_leaf, np.full((2, dim), 2, np.float16), np.array([1, 2]))
+    assert s.node_rows([(2, n_leaf)]) == [2]
+    # non-dense node ids are rejected
+    with pytest.raises(KeyError, match="dense"):
+        s.write_node(2, n_leaf + 5, np.zeros((1, dim), np.float16), np.array([9]))
+    # a freed slot is reused by the next allocation
+    old_slot = s._slots[2][4]
+    s.free_slot(2, 4)
+    s.write_node(2, n_leaf + 1, np.full((1, dim), 3, np.float16), np.array([55]))
+    assert s._slots[2][n_leaf + 1] == old_slot
+    # all of it survives reopen
+    s.close()
+    r = open_store(s.path)
+    assert r.format == 2
+    assert r._slots[2][4] == -1 and r._slots[2][n_leaf + 1] == old_slot
+    np.testing.assert_array_equal(r.get_node(2, n_leaf)[1], [1, 2])
+
+
+def test_blob_v1_reads_and_upgrades_in_place(built, tmp_path):
+    _, path, _ = built
+    v1 = convert(path, tmp_path / "v1.blob", format=1)
+    s = BlobStore(v1)
+    assert s.format == 1
+    e, i = s.get_node(2, 0)
+    # a row rewrite keeps the file at v1
+    s.write_node(2, 0, e[:4].astype(np.float16), i[:4])
+    assert s.format == 1
+    # first structural mutation upgrades the header to v2
+    s.free_slot(2, 5)
+    assert s.format == 2
+    s.close()
+    r = BlobStore(v1)
+    assert r.format == 2 and r._n_rows[2][5] == 0
+    np.testing.assert_array_equal(r.get_node(2, 0)[1], i[:4])
+
+
+def test_blob_block_capacity_fits_cluster_cap(built):
+    _, _, blob = built
+    s = open_store(blob)
+    cap = int(s.read_attrs(layout.INFO)["cluster_cap"])
+    assert s.capacity_rows >= cap
+    with pytest.raises(ValueError, match="exceeds the fixed block"):
+        s.write_node(
+            2, 0,
+            np.zeros((s.capacity_rows + 1, s.dim), np.float16),
+            np.zeros(s.capacity_rows + 1, np.int64),
+        )
+
+
+def test_blob_write_attrs_failure_leaves_state_consistent(built, tmp_path):
+    """Regression: an oversized header must raise BEFORE anything mutates —
+    read_attrs afterwards returns what is actually on disk."""
+    s = _mutable_copy(built, tmp_path, "blob")
+    before = s.read_attrs(layout.INFO)
+    real_offset = s.data_offset
+    s.data_offset = 64  # force the fit check to fail
+    try:
+        with pytest.raises(ValueError, match="header grew past"):
+            s.write_attrs(layout.INFO, {**before, "deleted_ids": list(range(10_000))})
+    finally:
+        s.data_offset = real_offset
+    assert s.read_attrs(layout.INFO) == before
+    s.write_attrs(layout.INFO, {**before, "generation": 9})  # still writable
+    assert s.read_attrs(layout.INFO)["generation"] == 9
+
+
+def test_blob_header_reserves_room_for_tombstones(built):
+    """convert(format=2) must budget header slack so delete() of a large
+    fraction of the collection fits in-place."""
+    data, path, _ = built
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as td:
+        blob = convert(path, td + "/t.blob")
+        s = open_store(blob)
+        info = s.read_attrs(layout.INFO)
+        n = int(info["n_items"])
+        s.write_attrs(layout.INFO, {**info, "deleted_ids": list(range(n))})
+        assert len(s.read_attrs(layout.INFO)["deleted_ids"]) == n
+        s.close()
+
+
+def test_fstore_get_node_invisible_torn_append(built, tmp_path):
+    """A crash between the emb append and the ids append must leave the
+    node readable with its OLD row count (emb trimmed to len(ids))."""
+    s = _mutable_copy(built, tmp_path, "fstore")
+    emb, ids = s.get_node(2, 7)
+    # simulate the torn state: emb grown, ids not yet rewritten
+    s.fstore.append_rows(f"{layout.node_group(2, 7)}/{layout.EMB}",
+                         np.zeros((3, emb.shape[1]), np.float16))
+    e2, i2 = s.get_node(2, 7)
+    assert e2.shape[0] == len(i2) == len(ids)
+    np.testing.assert_array_equal(i2, ids)
+
+
+def test_prefetch_wrapper_invalidates_inflight_on_write(built, tmp_path):
+    s = _mutable_copy(built, tmp_path, "blob")
+    ps = AsyncPrefetchStore(s, workers=2)
+    ps.prefetch([(2, 6)])
+    ps.drain()
+    e, i = s.get_node(2, 6)
+    ps.append_rows(2, 6, np.zeros((1, s.dim), np.float16), np.array([90009]))
+    e2, i2 = ps.get_node(2, 6)  # must NOT be the stale prefetched payload
+    assert len(i2) == len(i) + 1 and 90009 in i2
+    ps.close()
