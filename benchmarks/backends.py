@@ -11,10 +11,12 @@ memory-constrained setting, §6.1): each row is one backend —
   * blob+prefetch  blob wrapped in AsyncPrefetchStore (frontier children
                    load on background threads during traversal)
 
-Reported per backend: load time, cold/warm latency, and the ``IOStats``
+Reported per backend: load time, cold/warm latency, the ``IOStats``
 counters (bytes read / files opened / reads issued) accumulated by the
-store during the cold pass, plus the cache-resident bytes under the
-budget.
+store during the cold pass, the prefetch-accuracy counters over the whole
+run (issued / hits / wasted bytes — whether blob+prefetch's extra reads
+ever get used, or are evicted unconsumed under the tight budget), plus
+the cache-resident bytes under the budget.
 
 Also usable as a CI smoke check::
 
@@ -64,6 +66,14 @@ def compare(
                     if drain is not None:
                         drain()
                     cold_io = idx.store.io.delta(io0)
+            # prefetch accuracy over the WHOLE run (flushing earlier would
+            # charge payloads the warm pass is about to hit as wasted)
+            if drain is not None:
+                drain()
+            flush = getattr(idx, "flush_prefetch_stats", None)
+            if flush is not None:
+                flush()
+            full_io = idx.store.io.delta(io0)
             rows.append(
                 {
                     "backend": backend,
@@ -73,6 +83,9 @@ def compare(
                     "bytes_read": cold_io.bytes_read,
                     "files_opened": cold_io.files_opened,
                     "reads_issued": cold_io.reads_issued,
+                    "prefetch_issued": full_io.prefetch_issued,
+                    "prefetch_hits": full_io.prefetch_hits,
+                    "prefetch_wasted": full_io.prefetch_wasted_bytes,
                     "cache_bytes": idx.cache.resident_bytes,
                     "budget_bytes": cache_bytes,
                 }

@@ -64,6 +64,7 @@ def main() -> None:
         lifecycle,
         roofline,
         search_engine,
+        serving,
         table2_single_query,
         table3_tasks,
         table4_incremental,
@@ -119,6 +120,16 @@ def main() -> None:
         lc,
     )
 
+    # closed-loop concurrent serving: snapshot-isolated reads vs the
+    # single-threaded insert-while-search numbers in the lifecycle section
+    sv = serving.run(fast=args.fast)
+    _print_table(
+        "Concurrent serving — closed-loop QPS/latency, readonly vs "
+        "mixed-with-writer (scheduler row: avg queue-wait in p99_ms col, "
+        "degraded/misses in inserts/deletes cols)",
+        sv,
+    )
+
     print("\n=== Roofline (single-pod 16x16, from dry-run artifacts) ===")
     roofline.print_table("single")
     print("\n=== Roofline (multi-pod 2x16x16) ===")
@@ -156,11 +167,15 @@ def main() -> None:
             f"backend/{r['backend']}",
             r["lat_cold_s"] * 1e6,
             f"warm_us={r['lat_warm_s']*1e6:.1f};bytes={r['bytes_read']};"
-            f"files={r['files_opened']};reads={r['reads_issued']}",
+            f"files={r['files_opened']};reads={r['reads_issued']};"
+            f"pf={r['prefetch_hits']}/{r['prefetch_issued']}",
             io={
                 "bytes_read": r["bytes_read"],
                 "files_opened": r["files_opened"],
                 "reads_issued": r["reads_issued"],
+                "prefetch_issued": r["prefetch_issued"],
+                "prefetch_hits": r["prefetch_hits"],
+                "prefetch_wasted": r["prefetch_wasted"],
             },
         )
     for r in se:
@@ -181,6 +196,18 @@ def main() -> None:
             f"lifecycle/{r['scenario']}",
             1e6 / r["vectors_per_s"] if r["vectors_per_s"] else 0.0,
             f"vectors_per_s={r['vectors_per_s']};n={r['n']};{r['extra']}",
+        )
+    sv_ro = next(r for r in sv if r["phase"] == "readonly")
+    for r in sv:
+        if r["phase"] == "scheduler":
+            continue
+        ratio = r["p99_ms"] / sv_ro["p99_ms"] if sv_ro["p99_ms"] else 0.0
+        emit(
+            f"serving/{r['phase']}",
+            r["p99_ms"] * 1e3,  # us_per_call = p99 latency
+            f"p50_ms={r['p50_ms']};qps={r['qps']};completed={r['completed']};"
+            f"rejected={r['rejected']};inserts={r['inserts']};"
+            f"p99_vs_readonly={ratio:.2f}x",
         )
 
     if args.bench_json:

@@ -25,7 +25,13 @@ Public API (everything speaks core/api.py's unified shape):
                                      BlobStore (page-aligned single file,
                                      built with convert()), and
                                      AsyncPrefetchStore (threaded prefetch);
-                                     IOStats counts bytes/files/reads
+                                     IOStats counts bytes/files/reads plus
+                                     prefetch accuracy (hits/wasted bytes)
+  ECPSnapshot / BlobSnapshot       — generation-pinned read-only views for
+                                     concurrent serving (ECPIndex.snapshot /
+                                     BlobStore.pin): searches never block on
+                                     a writer and stay bit-identical to the
+                                     pinned generation (launch/scheduler.py)
   FStore                           — the raw transparent zarr-v2 file layer
   load_packed / PackedIndex        — dense device view of the hierarchy
   baselines                        — BruteForce / IVF / HNSWLite / VamanaLite
@@ -51,9 +57,10 @@ from .fstore import FStore
 from .layout import IndexInfo, derive_shape
 from .legacy import LegacyQueryState
 from .packed import PackedIndex, load_packed
-from .search import ECPIndex, ECPQuery, QueryState, make_kernel_scorer
+from .search import ECPIndex, ECPQuery, ECPSnapshot, QueryState, make_kernel_scorer
 from .store import (
     AsyncPrefetchStore,
+    BlobSnapshot,
     BlobStore,
     FStoreBackend,
     IOStats,
@@ -96,6 +103,8 @@ __all__ = [
     "load_packed",
     "ECPIndex",
     "ECPQuery",
+    "ECPSnapshot",
+    "BlobSnapshot",
     "QueryState",
     "LegacyQueryState",
     "Frontier",

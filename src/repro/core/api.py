@@ -96,7 +96,7 @@ class SearchStats:
 
 # --------------------------------------------------------------------- cache
 class NodeCache:
-    """LRU cache over (namespace, level, node) -> (embeddings f32, ids).
+    """LRU cache over node payloads ``key -> (embeddings f32, ids)``.
 
     Two independent budgets, both tunable at runtime (paper §4.2):
       ``max_nodes``:  None = unbounded; 0 = caching off; n > 0 = at most n
@@ -106,8 +106,14 @@ class NodeCache:
                       fleet-wide knob ``MultiIndexSession`` shares across
                       indexes.
 
-    Keys carry a namespace tag so several indexes can share one cache
-    without collisions; eviction is globally LRU across all of them.
+    Keys are opaque tuples whose FIRST element is a namespace tag, so
+    several indexes can share one cache without collisions; eviction is
+    globally LRU across all of them.  ``ECPIndex`` keys entries as
+    ``(namespace, epoch, node_version, level, node)`` — the snapshot-aware
+    schema of the serving subsystem: an in-place node rewrite bumps the
+    node's version and a compaction bumps the epoch, so a pinned
+    ``ECPSnapshot`` (which froze the old epoch/version map) and the live
+    index can share this cache while never resolving each other's bytes.
     """
 
     @staticmethod

@@ -103,7 +103,7 @@ def incremental_search(index, qs: LegacyQueryState, k: int) -> None:
                 want = [
                     (level + 1, int(ids[j]))
                     for j in order
-                    if not index.cache.contains((index._ns, level + 1, int(ids[j])))
+                    if not index.cache.contains(index._key(level + 1, int(ids[j])))
                 ]
                 if want:
                     index._store_prefetch(want, on_node=index._on_prefetched)

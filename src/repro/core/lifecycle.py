@@ -628,6 +628,33 @@ def _gather_ids(src: _ChunkSource, positions: np.ndarray) -> np.ndarray:
 
 
 # ---------------------------------------------------------------- mutation
+def publish_generation(index, attrs: dict, new_info, tombstones: set, written) -> None:
+    """THE commit point of every non-structural mutation.
+
+    A mutation becomes visible — to this process's searchers, to the
+    serving scheduler's snapshot manager, and to EXTERNAL readers of the
+    blob file — at the single ``write_attrs`` below, which publishes the
+    bumped ``generation`` together with the new counts, node registry, and
+    tombstone list atomically (one header rewrite on blob, one tmp+replace
+    JSON write on fstore).  Until this write, appended rows and
+    split-created leaves exist on disk but are unreachable: the old info
+    still describes the old tree, so a reader (or a crash) that never sees
+    the new attrs never sees a half-applied mutation.
+
+    External readers of the blob format poll ``info.generation`` and call
+    ``ECPIndex.refresh()`` when it moves; ``launch/scheduler.py`` instead
+    re-pins a fresh ``ECPIndex.snapshot()`` after each mutation returns.
+    ``_apply_mutation`` then updates this process's in-memory state (cache
+    invalidation + cache-key version bumps + metadata/root refresh).
+
+    Structural rewrites (``compact``) have their own commit points: the
+    fstore rebuild's final info write, or the blob's ``os.replace`` swap.
+    """
+    attrs.update(new_info.to_attrs())
+    index.store.write_attrs(layout.INFO, layout.write_tombstones(attrs, tombstones))
+    index._apply_mutation(new_info, written, tombstones=tombstones)
+
+
 def _node_rows(index, keys: list) -> list[int]:
     rows_fn = getattr(index.store, "node_rows", None)
     if rows_fn is not None:
@@ -899,9 +926,7 @@ def insert_items(index, vectors: np.ndarray, ids: np.ndarray | None = None) -> d
                 generation=info.generation + 1,
                 next_id=max(info.next_id, int(ids.max()) + 1),
             )
-            attrs.update(part_info.to_attrs())
-            index.store.write_attrs(layout.INFO, layout.write_tombstones(attrs, tombs))
-            index._apply_mutation(part_info, ctx["written"] | purged_keys, tombstones=tombs)
+            publish_generation(index, attrs, part_info, tombs, ctx["written"] | purged_keys)
         except Exception:
             index._apply_mutation(None, ctx["written"] | purged_keys)
         raise
@@ -917,9 +942,7 @@ def insert_items(index, vectors: np.ndarray, ids: np.ndarray | None = None) -> d
         generation=info.generation + 1,
         next_id=max(info.next_id, int(ids.max()) + 1),
     )
-    attrs.update(new_info.to_attrs())
-    index.store.write_attrs(layout.INFO, layout.write_tombstones(attrs, tombs))
-    index._apply_mutation(new_info, ctx["written"] | purged_keys, tombstones=tombs)
+    publish_generation(index, attrs, new_info, tombs, ctx["written"] | purged_keys)
     return {
         "inserted": n,
         "splits": ctx["splits"],
@@ -942,9 +965,7 @@ def delete_items(index, ids) -> int:
     if added == 0:
         return 0
     new_info = dc_replace(index.info, generation=index.info.generation + 1)
-    attrs.update(new_info.to_attrs())
-    index.store.write_attrs(layout.INFO, layout.write_tombstones(attrs, tombs))
-    index._apply_mutation(new_info, (), tombstones=tombs)
+    publish_generation(index, attrs, new_info, tombs, ())
     return added
 
 

@@ -53,6 +53,7 @@ mx_inc == -1 meaning unbounded).
 """
 from __future__ import annotations
 
+import threading
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 
@@ -66,6 +67,7 @@ from .store import NodeNormCache, Store, open_store
 
 __all__ = [
     "ECPIndex",
+    "ECPSnapshot",
     "ECPQuery",
     "QueryState",
     "NodeCache",
@@ -290,6 +292,18 @@ class ECPIndex:
         self._tombstones: set = layout.read_tombstones(attrs)
         self._tomb_arr: np.ndarray | None = None
         self._epoch = 0  # bumped by structural rewrites (compact)
+        # per-node version counters for the cache key (bumped on every
+        # in-place rewrite) — a pinned ECPSnapshot copies this map, so a
+        # shared NodeCache can never serve it bytes newer than its pin
+        self._node_ver: dict[tuple[int, int], int] = {}
+        # serializes insert/delete/compact/refresh against each other AND
+        # against snapshot(): a snapshot is only ever taken at a published
+        # generation, never mid-mutation
+        self._mut_lock = threading.RLock()
+        # prefetched-but-unconsumed payloads: (level, node) -> nbytes; a
+        # later cache hit counts a prefetch_hit, a miss (evicted first) or
+        # invalidation counts the bytes as wasted
+        self._pf_pending: dict[tuple[int, int], int] = {}
         # Loading the index = read info + the root node only (paper §4.2).
         self.root_emb, self.root_ids = self.store.get_node(0, 0)
         self.cache = cache if cache is not None else NodeCache(
@@ -324,11 +338,45 @@ class ECPIndex:
         return self.store
 
     # ------------------------------------------------------------ node IO
+    def _key(self, level: int, node: int) -> tuple:
+        """Versioned cache key: (namespace, epoch, node-version, level,
+        node).  Mutations bump the node's version (or the epoch, for
+        structural rewrites), so an ``ECPSnapshot`` pinned at an older
+        (epoch, version) and the live index can share one ``NodeCache``
+        without ever seeing each other's bytes."""
+        return (self._ns, self._epoch, self._node_ver.get((level, node), 0), level, node)
+
+    def _pf_consumed(self, level: int, node: int, *, hit: bool) -> None:
+        """Prefetch-accuracy attribution: a cache hit on a pending
+        prefetched node is a prefetch_hit; a miss means the payload was
+        evicted before use — its bytes were read for nothing."""
+        nb = self._pf_pending.pop((level, node), None)
+        if nb is None:
+            return
+        if hit:
+            self.store.io.count_prefetch(hits=1)
+        else:
+            self.store.io.count_prefetch(wasted_bytes=nb)
+
+    def flush_prefetch_stats(self) -> None:
+        """Charge every still-unconsumed prefetched payload as wasted (the
+        end-of-pass accounting benchmarks use, after ``store.drain()``)."""
+        while self._pf_pending:
+            try:
+                _, nb = self._pf_pending.popitem()
+            except KeyError:  # racing consumer emptied it
+                break
+            self.store.io.count_prefetch(wasted_bytes=nb)
+
     def get_node(self, level: int, node: int) -> tuple[np.ndarray, np.ndarray]:
-        key = (self._ns, level, node)
+        key = self._key(level, node)
         v = self.cache.get(key)
         if v is not None:
+            if self._pf_pending:
+                self._pf_consumed(level, node, hit=True)
             return v
+        if self._pf_pending:
+            self._pf_consumed(level, node, hit=False)
         v = self.store.get_node(level, node)
         self.load_node_count += 1
         self.cache.put(key, v)
@@ -337,7 +385,9 @@ class ECPIndex:
     def _on_prefetched(self, key, value) -> None:
         """Prefetch sink: completed background reads land straight in the
         (byte-budgeted) node cache instead of pinning store-side buffers."""
-        self.cache.put((self._ns, key[0], key[1]), value)
+        lv, nd = key[0], key[1]
+        self.cache.put(self._key(lv, nd), value)
+        self._pf_pending[(lv, nd)] = int(value[0].nbytes + value[1].nbytes)
 
     def get_nodes(self, keys: list) -> list:
         """Cache-aware batched node read (one ``Store.get_nodes`` for the
@@ -345,16 +395,20 @@ class ECPIndex:
         out: list = [None] * len(keys)
         missing, missing_i = [], []
         for i, (lv, nd) in enumerate(keys):
-            v = self.cache.get((self._ns, lv, nd))
+            v = self.cache.get(self._key(lv, nd))
             if v is not None:
+                if self._pf_pending:
+                    self._pf_consumed(lv, nd, hit=True)
                 out[i] = v
             else:
+                if self._pf_pending:
+                    self._pf_consumed(lv, nd, hit=False)
                 missing.append((lv, nd))
                 missing_i.append(i)
         if missing:
             for (lv, nd), i, v in zip(missing, missing_i, self.store.get_nodes(missing)):
                 self.load_node_count += 1
-                self.cache.put((self._ns, lv, nd), v)
+                self.cache.put(self._key(lv, nd), v)
                 out[i] = v
         return out
 
@@ -397,17 +451,44 @@ class ECPIndex:
     # ----------------------------------------------------------- mutation
     def insert(self, vectors, ids=None) -> dict:
         """Insert vectors into the live index (core/lifecycle.py): beam-1
-        routing, leaf appends, 2-means splits past ``cluster_cap``."""
-        return lifecycle.insert_items(self, vectors, ids)
+        routing, leaf appends, 2-means splits past ``cluster_cap``.
+        Mutations serialize on the index's mutation lock; concurrent
+        readers go through ``snapshot()`` (or an external RW lock)."""
+        with self._mut_lock:
+            return lifecycle.insert_items(self, vectors, ids)
 
     def delete(self, ids) -> int:
         """Tombstone item ids; both engines filter them from results."""
-        return lifecycle.delete_items(self, ids)
+        with self._mut_lock:
+            return lifecycle.delete_items(self, ids)
 
     def compact(self) -> dict:
         """Purge tombstones + rebalance splits by rebuilding from the live
         items — bit-identical to a fresh build of the logical collection."""
-        return lifecycle.compact(self)
+        with self._mut_lock:
+            return lifecycle.compact(self)
+
+    def snapshot(self) -> "ECPSnapshot":
+        """An isolated read-only view of the index at its current
+        generation (requires a store with ``pin()`` — the blob backend).
+
+        The snapshot answers ``search``/``next`` bit-identically to a
+        fresh single-threaded search of this generation, forever: later
+        ``insert``/``delete``/``compact`` on the live index cannot touch
+        it (copy-on-write slots + a dup'd fd), and its query handles never
+        raise ``StaleQueryError``.  Taken under the mutation lock, so it
+        always captures a published generation.  ``close()`` (or
+        ``release()``) drops the pin; ``acquire()``/``release()`` refcount
+        it for sharing across concurrent requests."""
+        pin = getattr(self.store, "pin", None)
+        if pin is None:
+            raise NotImplementedError(
+                f"snapshot() needs a generation-pinning store (blob); this "
+                f"index uses {self.store.backend!r} — serialize readers and "
+                "writers externally instead (launch/scheduler.py does)"
+            )
+        with self._mut_lock:
+            return ECPSnapshot(self, pin())
 
     @property
     def tombstones(self) -> set:
@@ -433,15 +514,21 @@ class ECPIndex:
     ) -> None:
         """Post-mutation bookkeeping (called by core/lifecycle.py): cache
         invalidation for rewritten nodes (covers a shared MultiIndexSession
-        cache — keys are namespaced), metadata refresh, root reload."""
+        cache — keys are namespaced), metadata refresh, root reload.
+        Rewritten nodes also bump their cache-key version so pinned
+        snapshots keep resolving the old entries, never the new bytes."""
         if structural:
             self.cache.invalidate_namespace(self._ns)
             if self._norms is not None:
                 self._norms.clear()
+            self.flush_prefetch_stats()
+            self._node_ver.clear()
             self._epoch += 1
         else:
             for key in written:
-                self.cache.invalidate((self._ns, *key))
+                self._pf_consumed(key[0], key[1], hit=False)
+                self.cache.invalidate(self._key(*key))
+                self._node_ver[key] = self._node_ver.get(key, 0) + 1
         if tombstones is not None:
             self._tombstones = set(tombstones)
             self._tomb_arr = None
@@ -467,15 +554,16 @@ class ECPIndex:
         process (another writer mutated or compacted the index): reopen a
         swapped blob, re-read metadata/tombstones/root, drop every cached
         node.  Open query handles become stale (``StaleQueryError``)."""
-        if self.store.backend.startswith("blob") and self._reopen is not None:
-            self._reload_store()  # an os.replace'd blob needs a fresh fd
-        attrs = self.store.read_attrs(layout.INFO)
-        self._apply_mutation(
-            layout.IndexInfo.from_attrs(attrs),
-            (),
-            tombstones=layout.read_tombstones(attrs),
-            structural=True,
-        )
+        with self._mut_lock:
+            if self.store.backend.startswith("blob") and self._reopen is not None:
+                self._reload_store()  # an os.replace'd blob needs a fresh fd
+            attrs = self.store.read_attrs(layout.INFO)
+            self._apply_mutation(
+                layout.IndexInfo.from_attrs(attrs),
+                (),
+                tombstones=layout.read_tombstones(attrs),
+                structural=True,
+            )
 
     # ------------------------------------------------------------ scoring
     def _sqnorms(self, level: int, node: int, emb: np.ndarray) -> np.ndarray | None:
@@ -512,7 +600,7 @@ class ECPIndex:
         return [
             (child_level, int(ids[j]))
             for j in sel
-            if not self.cache.contains((self._ns, child_level, int(ids[j])))
+            if not self.cache.contains(self._key(child_level, int(ids[j])))
         ]
 
     # ------------------------------------------------------- Algorithm 1
@@ -687,7 +775,7 @@ class ECPIndex:
                 key_rows.setdefault((p[2], p[3]), []).append(p)
             keys = list(key_rows)
             missing = {
-                key for key in keys if not self.cache.contains((self._ns, *key))
+                key for key in keys if not self.cache.contains(self._key(*key))
             }
             payloads = dict(zip(keys, self.get_nodes(keys)))
             for key in keys:
@@ -787,3 +875,82 @@ class ECPIndex:
             SearchStats() if (self.engine == "flat" and len(states) > 1) else None
         )
         return ECPQuery(self, states, single=single, batch_stats=batch_stats)
+
+
+class ECPSnapshot(ECPIndex):
+    """A generation-pinned, read-only ``ECPIndex`` view — the serving
+    subsystem's unit of snapshot isolation.
+
+    Created by ``ECPIndex.snapshot()`` under the mutation lock: the store
+    is a pinned ``BlobSnapshot`` (own dup'd fd, copy-on-write protected
+    slots) and the in-memory metadata (info, tombstones, root, cache-key
+    versions, epoch) is frozen at the same instant, so every search —
+    including ``next(k)`` continuations issued arbitrarily later — is
+    bit-identical to a fresh single-threaded search of that generation.
+    The node cache (and norm cache) is SHARED with the parent: versioned
+    keys keep the pinned and live entries apart while still letting
+    snapshot readers reuse everything the live index already loaded.
+
+    Searches are thread-safe (no per-index mutable search state beyond
+    locked caches), so N scheduler workers can serve from one snapshot.
+    ``acquire()``/``release()`` refcount the pin across concurrent
+    lease-holders; ``close()`` is an alias for ``release()``.  Mutations
+    raise ``PermissionError``.
+    """
+
+    def __init__(self, parent: ECPIndex, view):
+        # deliberately NOT calling ECPIndex.__init__: every field is
+        # copied from the parent (or shared where immutable/lock-guarded)
+        self._owns_store = True  # close() releases the pinned view
+        self._reopen = None
+        self.store = view
+        self.info = parent.info
+        self._tombstones = set(parent._tombstones)
+        self._tomb_arr = parent._tomb_arr
+        self._epoch = parent._epoch
+        self._node_ver = dict(parent._node_ver)
+        self._mut_lock = threading.RLock()  # uncontended; type uniformity
+        self._pf_pending: dict = {}
+        self.root_emb, self.root_ids = parent.root_emb, parent.root_ids
+        self.cache = parent.cache
+        self._ns = parent._ns
+        self._prefetch_workers = 0
+        self._pool = None
+        self._store_prefetch = None  # snapshots never prefetch
+        self.load_node_count = 0
+        self.engine = parent.engine
+        self._scorer = parent._scorer
+        self._batch_matrix = parent._batch_matrix
+        self._norms = parent._norms
+        self._refs = 1
+        self._refs_lock = threading.Lock()
+
+    # ------------------------------------------------------------ lifecycle
+    def acquire(self) -> "ECPSnapshot":
+        """Take one more reference (a scheduler lease); pair with
+        ``release()``."""
+        with self._refs_lock:
+            if self._refs <= 0:
+                raise ValueError("snapshot is closed")
+            self._refs += 1
+        return self
+
+    def release(self) -> None:
+        """Drop one reference; the last one releases the store pin."""
+        with self._refs_lock:
+            self._refs -= 1
+            if self._refs != 0:
+                return
+        self.store.close()
+
+    def close(self) -> None:
+        self.release()
+
+    # ------------------------------------------------------------- mutation
+    def _read_only(self, *_a, **_k):
+        raise PermissionError(
+            "ECPSnapshot is a pinned read-only view; mutate the live index"
+        )
+
+    insert = delete = compact = refresh = prefetch = _read_only
+    _apply_mutation = _reload_store = _read_only

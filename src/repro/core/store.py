@@ -61,6 +61,13 @@ Two header formats share the magic; the JSON ``format`` field versions them:
             always fits.  A v1 file is upgraded to v2 in place the first
             time a structural mutation needs the slot map (if its reserved
             header page can hold the map — otherwise rebuild).
+
+Snapshot isolation (the serving subsystem's read side): ``BlobStore.pin()``
+returns a ``BlobSnapshot`` — a read-only view pinned to the header version
+at pin time, on its own dup'd fd.  While pins are outstanding, in-place
+node updates copy-on-write into fresh slots and the superseded slots are
+retired (recycled once every older pin releases), so snapshot reads are
+bit-identical to the pinned version forever and never take the store lock.
 """
 from __future__ import annotations
 
@@ -83,6 +90,7 @@ __all__ = [
     "Store",
     "FStoreBackend",
     "BlobStore",
+    "BlobSnapshot",
     "AsyncPrefetchStore",
     "NodeNormCache",
     "open_store",
@@ -97,14 +105,42 @@ BLOB_FILENAME = "index.blob"
 
 # ------------------------------------------------------------------- IOStats
 class IOStats:
-    """Thread-safe I/O counters: bytes read, files opened, reads issued."""
+    """Thread-safe I/O counters: bytes read, files opened, reads issued.
 
-    __slots__ = ("bytes_read", "files_opened", "reads_issued", "_lock")
+    Prefetch accuracy rides along: ``prefetch_issued`` counts background
+    reads scheduled, ``prefetch_hits`` counts prefetched payloads a demand
+    read actually consumed (joined in flight, or served from the node
+    cache before eviction), and ``prefetch_wasted_bytes`` counts bytes
+    read ahead that were never used (evicted before demand, invalidated by
+    a write, or still unconsumed when the pass flushed) — the axis that
+    explains whether ``+prefetch`` pays for its extra reads.
+    """
 
-    def __init__(self, bytes_read: int = 0, files_opened: int = 0, reads_issued: int = 0):
+    __slots__ = (
+        "bytes_read",
+        "files_opened",
+        "reads_issued",
+        "prefetch_issued",
+        "prefetch_hits",
+        "prefetch_wasted_bytes",
+        "_lock",
+    )
+
+    def __init__(
+        self,
+        bytes_read: int = 0,
+        files_opened: int = 0,
+        reads_issued: int = 0,
+        prefetch_issued: int = 0,
+        prefetch_hits: int = 0,
+        prefetch_wasted_bytes: int = 0,
+    ):
         self.bytes_read = bytes_read
         self.files_opened = files_opened
         self.reads_issued = reads_issued
+        self.prefetch_issued = prefetch_issued
+        self.prefetch_hits = prefetch_hits
+        self.prefetch_wasted_bytes = prefetch_wasted_bytes
         self._lock = threading.Lock()
 
     def count(self, nbytes: int, *, files: int = 0, reads: int = 1) -> None:
@@ -113,9 +149,22 @@ class IOStats:
             self.files_opened += files
             self.reads_issued += reads
 
+    def count_prefetch(self, *, issued: int = 0, hits: int = 0, wasted_bytes: int = 0) -> None:
+        with self._lock:
+            self.prefetch_issued += issued
+            self.prefetch_hits += hits
+            self.prefetch_wasted_bytes += int(wasted_bytes)
+
     def snapshot(self) -> "IOStats":
         with self._lock:
-            return IOStats(self.bytes_read, self.files_opened, self.reads_issued)
+            return IOStats(
+                self.bytes_read,
+                self.files_opened,
+                self.reads_issued,
+                self.prefetch_issued,
+                self.prefetch_hits,
+                self.prefetch_wasted_bytes,
+            )
 
     def delta(self, since: "IOStats") -> "IOStats":
         with self._lock:
@@ -123,6 +172,9 @@ class IOStats:
                 self.bytes_read - since.bytes_read,
                 self.files_opened - since.files_opened,
                 self.reads_issued - since.reads_issued,
+                self.prefetch_issued - since.prefetch_issued,
+                self.prefetch_hits - since.prefetch_hits,
+                self.prefetch_wasted_bytes - since.prefetch_wasted_bytes,
             )
 
     def add(self, other: "IOStats") -> None:
@@ -130,6 +182,9 @@ class IOStats:
             self.bytes_read += other.bytes_read
             self.files_opened += other.files_opened
             self.reads_issued += other.reads_issued
+            self.prefetch_issued += other.prefetch_issued
+            self.prefetch_hits += other.prefetch_hits
+            self.prefetch_wasted_bytes += other.prefetch_wasted_bytes
 
     def as_dict(self) -> dict:
         with self._lock:
@@ -137,12 +192,18 @@ class IOStats:
                 "bytes_read": self.bytes_read,
                 "files_opened": self.files_opened,
                 "reads_issued": self.reads_issued,
+                "prefetch_issued": self.prefetch_issued,
+                "prefetch_hits": self.prefetch_hits,
+                "prefetch_wasted_bytes": self.prefetch_wasted_bytes,
             }
 
     def __repr__(self) -> str:
         return (
             f"IOStats(bytes_read={self.bytes_read}, "
-            f"files_opened={self.files_opened}, reads_issued={self.reads_issued})"
+            f"files_opened={self.files_opened}, reads_issued={self.reads_issued}, "
+            f"prefetch_issued={self.prefetch_issued}, "
+            f"prefetch_hits={self.prefetch_hits}, "
+            f"prefetch_wasted_bytes={self.prefetch_wasted_bytes})"
         )
 
 
@@ -391,6 +452,16 @@ class BlobStore:
         # re-entrant: append_rows/delete_rows hold it across their whole
         # read-modify-write, and call write_node (which takes it) inside
         self._lock = threading.RLock()
+        # ---- MVCC: generation pinning for snapshot-isolated readers ----
+        # every header install bumps _mvcc_seq; pin() records the current
+        # seq and returns a BlobSnapshot whose reads see exactly that
+        # header.  While pins exist, in-place updates copy-on-write into a
+        # fresh slot and the old slot is RETIRED (kept out of the free
+        # list) until every pin taken before the retirement is released.
+        self._mvcc_seq = 0
+        self._pins: dict[int, int] = {}  # pin id -> seq pinned at
+        self._next_pin = 0
+        self._retired: list[tuple[int, int]] = []  # (seq retired at, slot)
 
     # ---------------------------------------------------------------- layout
     @property
@@ -427,44 +498,56 @@ class BlobStore:
     def _empty(self) -> tuple[np.ndarray, np.ndarray]:
         return np.zeros((0, self.dim), np.float32), np.zeros((0,), self.ids_dtype)
 
+    # ------------------------------------------------------------- raw reads
+    # fd/slot-map/row-counts come in as parameters so a pinned
+    # ``BlobSnapshot`` (own dup'd fd, frozen maps) shares the exact same
+    # read + coalescing code as the live store
+    def _read_one(self, fd: int, slot: int, n_rows: int, io: IOStats):
+        need = n_rows * self._row_bytes
+        buf = os.pread(fd, need, self._offset(slot))
+        io.count(need, reads=1)
+        return self._parse_block(buf, n_rows)
+
+    def _read_batch(self, fd: int, entries: list, out: list, io: IOStats) -> None:
+        """``entries``: (slot, n_rows, out_index) triples; runs of adjacent
+        slots coalesce into one pread."""
+        entries.sort()
+        j = 0
+        while j < len(entries):
+            # grow a run of consecutive slots
+            r = j
+            while r + 1 < len(entries) and entries[r + 1][0] == entries[r][0] + 1:
+                r += 1
+            first_slot = entries[j][0]
+            last_slot, last_rows, _ = entries[r]
+            need = (last_slot - first_slot) * self.block_bytes + last_rows * self._row_bytes
+            buf = os.pread(fd, need, self._offset(first_slot))
+            io.count(need, reads=1)
+            for s in range(j, r + 1):
+                slot, n_rows, i = entries[s]
+                rel = (slot - first_slot) * self.block_bytes
+                out[i] = self._parse_block(buf[rel : rel + n_rows * self._row_bytes], n_rows)
+            j = r + 1
+
     # -------------------------------------------------------------- protocol
     def get_node(self, level: int, node: int) -> tuple[np.ndarray, np.ndarray]:
         self._check_key(level, node)
         n_rows = self._n_rows[level][node]
         if n_rows == 0:
             return self._empty()
-        need = n_rows * self._row_bytes
-        buf = os.pread(self._fd, need, self._offset(self._slots[level][node]))
-        self.io.count(need, reads=1)
-        return self._parse_block(buf, n_rows)
+        return self._read_one(self._fd, self._slots[level][node], n_rows, self.io)
 
     def get_nodes(self, keys: list) -> list:
         """Batched read; runs of adjacent slots coalesce into one pread."""
         out: list = [None] * len(keys)
-        slots = []
+        entries = []
         for i, (lv, nd) in enumerate(keys):
             self._check_key(lv, nd)
             if self._n_rows[lv][nd] == 0:
                 out[i] = self._empty()
             else:
-                slots.append((self._slots[lv][nd], self._n_rows[lv][nd], i))
-        slots.sort()
-        j = 0
-        while j < len(slots):
-            # grow a run of consecutive slots
-            r = j
-            while r + 1 < len(slots) and slots[r + 1][0] == slots[r][0] + 1:
-                r += 1
-            first_slot = slots[j][0]
-            last_slot, last_rows, _ = slots[r]
-            need = (last_slot - first_slot) * self.block_bytes + last_rows * self._row_bytes
-            buf = os.pread(self._fd, need, self._offset(first_slot))
-            self.io.count(need, reads=1)
-            for s in range(j, r + 1):
-                slot, n_rows, i = slots[s]
-                rel = (slot - first_slot) * self.block_bytes
-                out[i] = self._parse_block(buf[rel : rel + n_rows * self._row_bytes], n_rows)
-            j = r + 1
+                entries.append((self._slots[lv][nd], self._n_rows[lv][nd], i))
+        self._read_batch(self._fd, entries, out, self.io)
         return out
 
     def node_rows(self, keys: list) -> list[int]:
@@ -540,6 +623,13 @@ class BlobStore:
                 slot = self._slots[level][node]
                 if slot < 0:  # rewriting a released node re-allocates storage
                     slot, commit = self._alloc_slot_locked(level, node, n_rows)
+                elif self._pins:
+                    # copy-on-write: a pinned snapshot may still read the
+                    # old block, so the update lands in a fresh slot and
+                    # the old one is retired until those pins release
+                    slot, commit = self._alloc_slot_locked(
+                        level, node, n_rows, retire=slot
+                    )
                 else:
                     def commit() -> None:
                         self._n_rows[level][node] = n_rows
@@ -598,10 +688,15 @@ class BlobStore:
                 cand_rows[level].append(0)
             self._v2_candidate_locked(cand_rows, cand_slots, free, n_slots)
 
-    def _alloc_slot_locked(self, level: int, node: int, n_rows: int):
+    def _alloc_slot_locked(self, level: int, node: int, n_rows: int, *, retire: int | None = None):
         """Pick a physical slot for a new/re-allocated node; the returned
         commit closure installs the pre-serialized candidate header after
-        the block write succeeds."""
+        the block write succeeds.  ``retire`` is the node's previous slot
+        when this allocation is a copy-on-write around pinned snapshots:
+        it is dropped from the slot map but NOT freed — it joins the
+        retired list until every pin older than the install releases.
+        (Any slot already on the free list is safe to hand out: it was
+        unreferenced in every header a current pin could have pinned.)"""
         new_node = node == len(self._n_rows[level])
         slot = self._free[0] if self._free else self._n_slots
         cand_slots = [list(lv) for lv in self._slots]
@@ -618,7 +713,13 @@ class BlobStore:
             [s for s in self._free if s != slot],
             max(self._n_slots, slot + 1),
         )
-        return slot, lambda: self._install_v2_locked(raw, header)
+
+        def commit() -> None:
+            self._install_v2_locked(raw, header)
+            if retire is not None and retire >= 0:
+                self._retired.append((self._mvcc_seq, retire))
+
+        return slot, commit
 
     def append_rows(self, level: int, node: int, emb: np.ndarray, ids: np.ndarray) -> None:
         """Grow a node in place.  The block layout is emb-rows-then-ids, so
@@ -646,7 +747,9 @@ class BlobStore:
 
     def free_slot(self, level: int, node: int) -> None:
         """Release a node's block back to the free list; the node id stays
-        valid and reads as empty until something is written to it again."""
+        valid and reads as empty until something is written to it again.
+        With pinned snapshots outstanding the slot is retired instead of
+        freed (a pin taken before the release may still read it)."""
         if not self._writable:
             raise PermissionError(f"blob store opened read-only: {self.path}")
         with self._lock:
@@ -654,17 +757,20 @@ class BlobStore:
             slot = self._slots[level][node]
             if slot < 0 and self._n_rows[level][node] == 0:
                 return
+            retire = bool(self._pins) and slot >= 0
             cand_slots = [list(lv) for lv in self._slots]
             cand_rows = [list(lv) for lv in self._n_rows]
             cand_slots[level][node] = -1
             cand_rows[level][node] = 0
+            free = set(self._free)
+            if slot >= 0 and not retire:
+                free.add(slot)
             raw, header = self._v2_candidate_locked(
-                cand_rows,
-                cand_slots,
-                sorted(set(self._free) | ({slot} if slot >= 0 else set())),
-                self._n_slots,
+                cand_rows, cand_slots, sorted(free), self._n_slots
             )
             self._install_v2_locked(raw, header)
+            if retire:
+                self._retired.append((self._mvcc_seq, slot))
 
     def _check_fits(self, raw: bytes) -> bytes:
         if 16 + len(raw) > self.data_offset:
@@ -678,9 +784,51 @@ class BlobStore:
     def _pwrite_header_locked(self, raw: bytes) -> None:
         """THE header write: every path (row updates, slot allocation,
         free_slot, attrs) funnels through here so padding/length framing
-        can never diverge."""
+        can never diverge — and every install is a new MVCC version."""
+        self._mvcc_seq += 1
         pad = b" " * (self.data_offset - 16 - len(raw))
         os.pwrite(self._fd, BLOB_MAGIC + len(raw).to_bytes(8, "little") + raw + pad, 0)
+
+    # ------------------------------------------------- snapshot pinning (MVCC)
+    def pin(self) -> "BlobSnapshot":
+        """Pin the current header and return a read-only ``BlobSnapshot``
+        whose every read sees exactly this version of the index, no matter
+        what the writer does afterwards (in-place updates copy-on-write
+        around pinned slots; a compaction's ``os.replace`` cannot touch
+        the snapshot's dup'd fd).  Release with ``BlobSnapshot.close()``.
+
+        Retired-but-pinned slots live only in memory: a crash while pins
+        are outstanding leaks them from the persisted free list (harmless
+        — ``compact()`` rebuilds the file and reclaims everything)."""
+        with self._lock:
+            pin_id = self._next_pin
+            self._next_pin += 1
+            self._pins[pin_id] = self._mvcc_seq
+            return BlobSnapshot(self, pin_id)
+
+    def _release_pin(self, pin_id: int) -> None:
+        with self._lock:
+            self._pins.pop(pin_id, None)
+            self._recycle_locked()
+
+    def _recycle_locked(self) -> None:
+        """Return retired slots to the (in-memory) free list once no pin
+        predates their retirement; the persisted free list catches up on
+        the next header write."""
+        if not self._retired:
+            return
+        floor = min(self._pins.values()) if self._pins else None
+        still, freed = [], []
+        for seq, slot in self._retired:
+            # a pin at seq P sees the header as of P; the slot became
+            # unreferenced at seq > P only for pins with P < seq
+            if floor is None or seq <= floor:
+                freed.append(slot)
+            else:
+                still.append((seq, slot))
+        if freed:
+            self._retired = still
+            self._free = sorted(set(self._free) | set(freed))
 
     def _serialize_header_locked(self) -> bytes:
         self._header["levels"] = self._n_rows
@@ -698,6 +846,109 @@ class BlobStore:
         if getattr(self, "_fd", -1) >= 0:
             os.close(self._fd)
             self._fd = -1
+
+    def __del__(self):  # best-effort; close() is the real API
+        try:
+            self.close()
+        except OSError:
+            pass
+
+
+# ------------------------------------------------------------- blob snapshot
+class BlobSnapshot:
+    """A pinned, read-only view of one ``BlobStore`` version (the
+    ``SnapshotView`` of the serving subsystem).
+
+    Created by ``BlobStore.pin()`` under the store lock: it copies the
+    row-count/slot maps and info of the pinned header and dups the file
+    descriptor, so
+
+      * reads are lock-free and bit-identical to what the live store
+        would have returned at pin time — writers copy-on-write around
+        pinned slots, so the bytes under this view never change;
+      * it survives a blob compaction's ``os.replace`` (the dup'd fd
+        keeps the replaced file alive until the snapshot closes);
+      * N snapshot readers share one physical file with a single writer.
+
+    It speaks the read side of the ``Store`` protocol (``get_node``,
+    ``get_nodes``, ``node_rows``, ``read_attrs``, ``io``); every write
+    raises ``PermissionError``.  ``close()`` releases the pin (idempotent)
+    so the parent can recycle retired slots.
+    """
+
+    backend = "blob+snapshot"
+
+    def __init__(self, parent: BlobStore, pin_id: int):
+        # runs under the parent's (re-entrant) lock, inside pin()
+        self._parent = parent
+        self._pin_id = pin_id
+        self._fd = os.dup(parent._fd)
+        self.path = parent.path
+        self.io = IOStats()
+        self.pinned_seq = parent._mvcc_seq
+        self._n_rows = [list(lv) for lv in parent._n_rows]
+        self._slots = [list(lv) for lv in parent._slots]
+        self._info = dict(parent._header.get("info", {}))
+        self.generation = int(self._info.get(layout.GENERATION, 0))
+
+    # ------------------------------------------------------------ read side
+    def _check_key(self, level: int, node: int) -> None:
+        if not (0 <= level < len(self._n_rows)):
+            raise KeyError(f"no such level in blob snapshot: {level}")
+        if not (0 <= node < len(self._n_rows[level])):
+            raise KeyError(f"no such node in blob snapshot: lvl {level} node {node}")
+
+    def get_node(self, level: int, node: int) -> tuple[np.ndarray, np.ndarray]:
+        self._check_key(level, node)
+        n_rows = self._n_rows[level][node]
+        if n_rows == 0:
+            return self._parent._empty()
+        return self._parent._read_one(self._fd, self._slots[level][node], n_rows, self.io)
+
+    def get_nodes(self, keys: list) -> list:
+        out: list = [None] * len(keys)
+        entries = []
+        for i, (lv, nd) in enumerate(keys):
+            self._check_key(lv, nd)
+            if self._n_rows[lv][nd] == 0:
+                out[i] = self._parent._empty()
+            else:
+                entries.append((self._slots[lv][nd], self._n_rows[lv][nd], i))
+        self._parent._read_batch(self._fd, entries, out, self.io)
+        return out
+
+    def node_rows(self, keys: list) -> list[int]:
+        return [self._n_rows[lv][nd] for lv, nd in keys]
+
+    def read_attrs(self, path: str) -> dict:
+        if path == layout.INFO:
+            return dict(self._info)
+        return {}
+
+    # ----------------------------------------------------------- write side
+    def _read_only(self, *_a, **_k):
+        raise PermissionError(
+            "blob snapshot is a pinned read-only view; mutate the live store"
+        )
+
+    write_attrs = write_node = append_rows = delete_rows = free_slot = _read_only
+
+    # ------------------------------------------------------------ lifecycle
+    @property
+    def closed(self) -> bool:
+        return self._fd < 0
+
+    def close(self) -> None:
+        if self._fd >= 0:
+            os.close(self._fd)
+            self._fd = -1
+            self._parent._release_pin(self._pin_id)
+
+    def __enter__(self) -> "BlobSnapshot":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     def __del__(self):  # best-effort; close() is the real API
         try:
@@ -924,6 +1175,7 @@ class AsyncPrefetchStore:
                 f = self._ex.submit(self.inner.get_node, *key)
                 self._futures[key] = f
                 self.prefetch_issued += 1
+                self.inner.io.count_prefetch(issued=1)
                 submitted.append((key, f))
         if on_node is None:
             return
@@ -958,6 +1210,7 @@ class AsyncPrefetchStore:
         f = self._pop((level, node))
         if f is not None:
             self.prefetch_hits += 1
+            self.inner.io.count_prefetch(hits=1)
             return f.result()
         return self.inner.get_node(level, node)
 
@@ -968,6 +1221,7 @@ class AsyncPrefetchStore:
             f = self._pop(tuple(key))
             if f is not None:
                 self.prefetch_hits += 1
+                self.inner.io.count_prefetch(hits=1)
                 out[i] = f.result()
             else:
                 missing.append(key)
@@ -988,7 +1242,9 @@ class AsyncPrefetchStore:
         otherwise its stale payload could satisfy a later demand read."""
         f = self._pop((level, node))
         if f is not None:
-            f.cancel()
+            if not f.cancel() and f.done() and f.exception() is None:
+                emb, ids = f.result()  # completed but now stale: read for nothing
+                self.inner.io.count_prefetch(wasted_bytes=emb.nbytes + ids.nbytes)
 
     def write_node(self, level: int, node: int, emb, ids, **kw) -> None:
         self._invalidate(level, node)

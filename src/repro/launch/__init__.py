@@ -18,6 +18,13 @@ _EXPORTS = {
     "batch_axes_of": "mesh",
     "make_host_mesh": "mesh",
     "make_production_mesh": "mesh",
+    "Server": "serve",
+    "ServeStats": "serve",
+    "LatencyRing": "serve",
+    "DeadlinePolicy": "scheduler",
+    "RequestScheduler": "scheduler",
+    "SnapshotManager": "scheduler",
+    "ServerOverloadedError": "scheduler",
 }
 
 __all__ = list(_EXPORTS)
