@@ -1,0 +1,286 @@
+"""Shard federation benchmark — one logical eCP index over many blob files.
+
+The scatter-gather question, measured: a ``FederatedIndex`` over the same
+collection split N ways must stay comparable to the single-file index at
+EQUAL TOTAL effort ``b`` — the router splits ``b`` across probed shards
+(conserved, floor ``b_min``), each shard runs its own file-mode traversal,
+and one global top-k heap merges the streams.  Rows report latency,
+recall@10 vs exact, how many shards were probed, and the aggregated
+``SearchStats``/``IOStats`` across shards.
+
+CI smoke gate::
+
+  PYTHONPATH=src python -m benchmarks.federation --smoke
+
+asserts the subsystem's hard invariants on a 4-shard split:
+
+  * recall@10 within 2% of the single-file index at equal total ``b``;
+  * per-query effort allocation sums EXACTLY to ``b`` (conservation);
+  * aggregated stats are consistent with the per-shard breakdown;
+  * mixed search + insert + BACKGROUND per-shard compaction through the
+    serving scheduler completes with readers making progress mid-compact
+    (snapshot isolation: no reader ever waits out the writer).
+"""
+from __future__ import annotations
+
+import tempfile
+import threading
+import time
+from pathlib import Path
+
+import numpy as np
+
+
+def _exact_top(data: np.ndarray, queries: np.ndarray, k: int, metric: str = "l2"):
+    from repro.core.distances import np_distances
+
+    return np.argsort(np_distances(queries, data, metric), axis=1, kind="stable")[:, :k]
+
+
+def _recall(idx, queries, gt, *, k, b) -> tuple[float, float, dict]:
+    """(recall@k, mean probed shards, aggregated stats dict) over queries."""
+    hits = 0
+    probed = []
+    agg = {"leaves": 0, "dists": 0, "bytes": 0, "reads": 0}
+    for q, g in zip(queries, gt):
+        rs = idx.search(q, k=k, b=b)
+        hits += len(set(rs.row_ids(0)) & set(int(x) for x in g))
+        st = rs.stats
+        agg["leaves"] += st.leaves_opened
+        agg["dists"] += st.distance_calcs
+        agg["bytes"] += st.io.bytes_read
+        agg["reads"] += st.io.reads_issued
+        alloc = getattr(rs.query, "allocation", None)
+        probed.append(len(alloc) if alloc is not None else 1)
+        rs.query.close()
+    return hits / (len(queries) * k), float(np.mean(probed)), agg
+
+
+def _timed(idx, queries, *, k, b, runs) -> float:
+    best = float("inf")
+    for _ in range(runs):
+        t0 = time.perf_counter()
+        for q in queries:
+            idx.search(q, k=k, b=b).query.close()
+        best = min(best, (time.perf_counter() - t0) / len(queries))
+    return best
+
+
+def compare(
+    *,
+    data: np.ndarray,
+    single_blob: str,
+    queries: np.ndarray,
+    n_shards: int = 4,
+    k: int = 10,
+    b: int = 24,
+    runs: int = 2,
+    workdir: str | None = None,
+    cfg=None,
+) -> list[dict]:
+    """Build an ``n_shards``-way federation of ``data`` and compare it to
+    the single-file index at equal total effort.  One row per config."""
+    from repro.core import ECPBuildConfig, build_federation, open_index
+
+    cfg = cfg or ECPBuildConfig(
+        levels=2, metric="l2", cluster_cap=max(64, len(data) // 256)
+    )
+    workdir = Path(workdir or tempfile.mkdtemp(prefix="ecpfs_fed_"))
+    root = build_federation(data, workdir / "fed", n_shards=n_shards, cfg=cfg)
+    gt = _exact_top(data, queries, k, cfg.metric)
+
+    rows = []
+    single = open_index(single_blob, mode="file", backend="blob")
+    with single:
+        rec, probed, agg = _recall(single, queries, gt, k=k, b=b)
+        lat = _timed(single, queries, k=k, b=b, runs=runs)
+        rows.append(
+            {
+                "config": "single", "shards": 1, "b_total": b,
+                "lat_s": round(lat, 6), "recall@10": round(rec, 4),
+                "probed": probed, **agg,
+            }
+        )
+    fed = open_index(root)
+    with fed:
+        rec, probed, agg = _recall(fed, queries, gt, k=k, b=b)
+        lat = _timed(fed, queries, k=k, b=b, runs=runs)
+        rows.append(
+            {
+                "config": f"scatter-gather/{n_shards}", "shards": n_shards,
+                "b_total": b, "lat_s": round(lat, 6), "recall@10": round(rec, 4),
+                "probed": round(probed, 2), **agg,
+            }
+        )
+    return rows
+
+
+def run(*, fast: bool = True, runs: int = 2, n_shards: int = 4) -> list[dict]:
+    """The run.py scenario: federate the shared bench suite's collection
+    and compare against its single blob index at equal total ``b``."""
+    from .indexes import get_suite
+
+    s = get_suite()
+    queries = np.stack([t.queries[-1] for t in s.ds.tasks])
+    return compare(
+        data=s.ds.data,
+        single_blob=s.ecp_blob_path,
+        queries=queries,
+        n_shards=n_shards,
+        k=10,
+        b=24,
+        runs=runs,
+    )
+
+
+# ------------------------------------------------------------------ smoke
+def _assert_conservation(fed, queries, *, b: int) -> None:
+    for q in queries:
+        rs = fed.search(q, k=10, b=b)
+        alloc = rs.query.allocation
+        total = sum(alloc.values())
+        assert total == b, f"effort not conserved: {alloc} sums to {total}, want {b}"
+        assert all(v >= fed.b_min for v in alloc.values()), (
+            f"allocation below b_min floor: {alloc}"
+        )
+        rs.query.close()
+
+
+def _assert_stats_consistent(fed, q, *, b: int) -> None:
+    rs = fed.search(q, k=10, b=b)
+    per = rs.query.shard_stats
+    agg = rs.stats
+    assert set(per) == set(rs.query.allocation), (per.keys(), rs.query.allocation)
+    for field in ("leaves_opened", "distance_calcs", "node_loads"):
+        total = sum(getattr(st, field) for st in per.values())
+        got = getattr(agg, field)
+        assert got == total, f"{field}: aggregate {got} != sum of shards {total}"
+    assert agg.io.bytes_read == sum(st.io.bytes_read for st in per.values())
+    rs.query.close()
+
+
+def _mixed_load_check(root, data, queries, *, dim: int) -> dict:
+    """Search + insert + BACKGROUND compaction through the scheduler.
+
+    Readers must make progress *while* the per-shard compaction runs —
+    scheduler reads are snapshot-leased, so no search ever waits for the
+    writer.  Asserts reader progress during the compact window and that
+    the compaction actually rewrote every shard."""
+    from repro.core import open_index
+    from repro.launch.serve import Server
+
+    fed = open_index(root)
+    stop = threading.Event()
+    lat: list = []
+    errors: list = []
+    in_window: list = []
+
+    with Server(fed, workers=2, queue_depth=32) as srv:
+        def reader(tid: int) -> None:
+            rng = np.random.default_rng(tid)
+            while not stop.is_set():
+                q = queries[rng.integers(0, len(queries))]
+                t0 = time.perf_counter()
+                try:
+                    _, sid = srv.search(q, k=10, b=8)
+                    srv.close(sid)
+                except Exception as e:  # noqa: BLE001 - surfaced below
+                    errors.append(e)
+                    return
+                lat.append((time.perf_counter() - t0, compacting.is_set()))
+
+        compacting = threading.Event()
+        threads = [threading.Thread(target=reader, args=(i,), daemon=True) for i in range(2)]
+        for t in threads:
+            t.start()
+
+        rng = np.random.default_rng(7)
+        base = int(fed.info.next_id)
+        for i in range(4):  # sustained ingest through the scheduler
+            vecs = rng.normal(size=(48, dim)).astype(np.float32)
+            srv.insert(vecs, np.arange(base + i * 48, base + (i + 1) * 48))
+        srv.delete(np.arange(0, 200, 7))
+
+        gen_before = fed.info.generation
+        compacting.set()
+        fut = fed.compact_async(scheduler=srv.scheduler)
+        result = fut.result(timeout=120)
+        compacting.clear()
+        time.sleep(0.05)
+        stop.set()
+        for t in threads:
+            t.join(timeout=30)
+
+        assert not errors, f"reader failed during mixed load: {errors[0]!r}"
+        in_window = [ms for ms, during in lat if during]
+        assert in_window, "no search completed during the background compaction"
+        assert fed.info.generation > gen_before, "compaction published no generation"
+        assert set(result["shards"]) == set(fed.shard_names), result
+        st = srv.scheduler.stats.as_dict()
+        assert st["submitted"] == st["completed"] + st["rejected"] + st["failed"], st
+    return {
+        "searches": len(lat),
+        "during_compact": len(in_window),
+        "max_ms_during_compact": round(max(in_window) * 1e3, 1),
+    }
+
+
+def smoke(n: int = 4000, dim: int = 32, n_queries: int = 64, b: int = 24) -> None:
+    """The CI gate (see module docstring).  Raises on any violation."""
+    from repro.core import ECPBuildConfig, build_federation, build_index, convert, open_index
+    from repro.data import clustered_vectors
+
+    data, _ = clustered_vectors(0, n=n, dim=dim, n_clusters=48)
+    cfg = ECPBuildConfig(levels=2, cluster_cap=100, metric="l2")
+    rng = np.random.default_rng(100)
+    queries = data[rng.integers(0, n, n_queries)]
+    gt = _exact_top(data, queries, 10)
+
+    with tempfile.TemporaryDirectory() as td:
+        td = Path(td)
+        build_index(data, str(td / "single"), cfg)
+        blob = str(convert(str(td / "single"), td / "single.blob"))
+        root = build_federation(data, td / "fed", n_shards=4, cfg=cfg)
+
+        single = open_index(blob, mode="file", backend="blob")
+        fed = open_index(root)
+        assert fed.shard_names and len(fed.shard_names) == 4, fed.shard_names
+
+        rec_single, _, _ = _recall(single, queries, gt, k=10, b=b)
+        rec_fed, probed, _ = _recall(fed, queries, gt, k=10, b=b)
+        assert rec_fed >= rec_single - 0.02, (
+            f"federated recall@10 {rec_fed:.4f} more than 2% below "
+            f"single-file {rec_single:.4f} at equal total b={b}"
+        )
+
+        _assert_conservation(fed, queries[:16], b=b)
+        for bb in (5, 7, 16):  # conservation at awkward b values too
+            _assert_conservation(fed, queries[:4], b=bb)
+        _assert_stats_consistent(fed, queries[0], b=b)
+
+        single.close()
+        fed.close()
+
+        mixed = _mixed_load_check(root, data, queries, dim=dim)
+
+    print(
+        f"federation smoke OK: recall@10 fed={rec_fed:.4f} vs single="
+        f"{rec_single:.4f} at b={b} (gap {rec_single - rec_fed:+.4f} <= 0.02), "
+        f"avg probed shards {probed:.2f}; effort conserved; "
+        f"mixed load: {mixed['searches']} searches "
+        f"({mixed['during_compact']} during background compact, "
+        f"max {mixed['max_ms_during_compact']}ms)"
+    )
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="4-shard invariants gate")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+    else:
+        for row in run():
+            print(row)

@@ -60,6 +60,7 @@ def main() -> None:
 
     from . import (
         backends,
+        federation,
         indexes,
         lifecycle,
         roofline,
@@ -118,6 +119,15 @@ def main() -> None:
         "Index lifecycle — build / insert-while-search / delete / compact "
         "throughput (write path)",
         lc,
+    )
+
+    # shard federation: the same collection split 4 ways behind one
+    # router, compared to the single blob at equal total effort b
+    fd = federation.run(fast=args.fast, runs=runs)
+    _print_table(
+        "Shard federation — scatter-gather over 4 blob shards vs the "
+        "single-file index at equal total b (recall@10 vs exact)",
+        fd,
     )
 
     # closed-loop concurrent serving: snapshot-isolated reads vs the
@@ -196,6 +206,17 @@ def main() -> None:
             f"lifecycle/{r['scenario']}",
             1e6 / r["vectors_per_s"] if r["vectors_per_s"] else 0.0,
             f"vectors_per_s={r['vectors_per_s']};n={r['n']};{r['extra']}",
+        )
+    fd_single = next(r for r in fd if r["config"] == "single")
+    for r in fd:
+        emit(
+            f"federation/{r['config']}",
+            r["lat_s"] * 1e6,
+            f"recall@10={r['recall@10']};b_total={r['b_total']};"
+            f"shards={r['shards']};probed={r['probed']};"
+            f"recall_gap={fd_single['recall@10'] - r['recall@10']:+.4f}",
+            io={"bytes_read": r["bytes"], "reads_issued": r["reads"],
+                "leaves_opened": r["leaves"]},
         )
     sv_ro = next(r for r in sv if r["phase"] == "readonly")
     for r in sv:

@@ -159,12 +159,16 @@ def run_serving(
     phase_s: float = 3.0,
     cache_max_nodes: int = 64,
 ) -> list[dict]:
-    """One row per phase (readonly, mixed) for one Server configuration."""
+    """One row per phase (readonly, mixed) for one Server configuration.
+
+    ``blob_path`` may be a single blob file OR a federation root (a
+    directory with a ``federation.json`` manifest): ``open_index`` auto-
+    detects, and the Server/scheduler machinery is index-agnostic."""
     from repro.core import open_index
     from repro.launch.serve import Server
 
     idx = open_index(
-        blob_path, mode="file", backend="blob", cache_max_nodes=cache_max_nodes
+        blob_path, mode="file", backend="auto", cache_max_nodes=cache_max_nodes
     )
     rows = []
     with Server(idx, workers=workers, queue_depth=queue_depth) as srv:

@@ -32,6 +32,12 @@ Public API (everything speaks core/api.py's unified shape):
                                      BlobStore.pin): searches never block on
                                      a writer and stay bit-identical to the
                                      pinned generation (launch/scheduler.py)
+  FederatedIndex / build_federation — one logical index over N shard files
+                                     (federation.py): manifest-described
+                                     shards, router-scored scatter-gather
+                                     with conserved effort split, routed
+                                     inserts, fan-out deletes, per-shard
+                                     background compaction
   FStore                           — the raw transparent zarr-v2 file layer
   load_packed / PackedIndex        — dense device view of the hierarchy
   baselines                        — BruteForce / IVF / HNSWLite / VamanaLite
@@ -50,6 +56,15 @@ from .api import (
     open_index,
 )
 from .build import ECPBuildConfig, build_index
+from .federation import (
+    FederatedIndex,
+    FederatedQuery,
+    FederatedSnapshot,
+    FederationInfo,
+    FederationManifest,
+    allocate_effort,
+    build_federation,
+)
 from .lifecycle import build_index_streaming, reservoir_sample
 from .batched import BatchedQuery, BatchedQueryState, BatchedSearcher
 from .frontier import CandidateBuffer, Frontier
@@ -93,6 +108,13 @@ __all__ = [
     "build_index",
     "build_index_streaming",
     "reservoir_sample",
+    "FederatedIndex",
+    "FederatedQuery",
+    "FederatedSnapshot",
+    "FederationInfo",
+    "FederationManifest",
+    "allocate_effort",
+    "build_federation",
     "BatchedQuery",
     "BatchedQueryState",
     "BatchedSearcher",

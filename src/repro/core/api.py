@@ -38,6 +38,7 @@ across indexes, each ``ECPIndex`` namespaces its keys into it.
 """
 from __future__ import annotations
 
+import os
 import threading
 from collections import OrderedDict
 from dataclasses import dataclass, field
@@ -402,7 +403,29 @@ def open_index(
     or "auto" (blob when ``path`` is/contains a blob, else fstore).
     ``prefetch=True`` wraps the store with async frontier prefetching
     (file mode only).
+
+    A path holding a federation manifest (``federation.json``) opens as a
+    ``FederatedIndex`` — one logical index scatter-gathering over its
+    shards (core/federation.py); it is file-mode only.
     """
+    if isinstance(path, (str, os.PathLike)):
+        from .federation import FederatedIndex, find_manifest
+
+        if find_manifest(path) is not None:
+            if mode not in ("auto", "file"):
+                raise ValueError(
+                    f"a federated index only supports mode='file', got {mode!r}"
+                )
+            return FederatedIndex(
+                path,
+                backend=backend,
+                prefetch=prefetch,
+                cache=cache,
+                namespace=namespace,
+                cache_max_nodes=cache_max_nodes,
+                cache_max_bytes=cache_max_bytes,
+                **kw,
+            )
     wants_cache = (
         cache is not None
         or namespace is not None
@@ -502,7 +525,15 @@ class MultiIndexSession:
         )
 
     def stats(self) -> dict:
-        per = self.cache.namespace_stats()
+        raw = self.cache.namespace_stats()
+        # a federated index registers its shards under "<name>/<shard>"
+        # namespaces: roll those up so per_index charges each index for
+        # everything it holds
+        per: dict = {}
+        for ns, (n, b) in raw.items():
+            base = ns.split("/", 1)[0]
+            pn, pb = per.get(base, (0, 0))
+            per[base] = (pn + n, pb + b)
         return {
             "indexes": self.names(),
             "resident_nodes": self.cache.n_resident,

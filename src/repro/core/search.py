@@ -491,6 +491,13 @@ class ECPIndex:
             return ECPSnapshot(self, pin())
 
     @property
+    def supports_snapshot(self) -> bool:
+        """Whether ``snapshot()`` works here — i.e. the store pins
+        generations (blob).  The serving scheduler keys its isolation
+        strategy off this (uniform across ECPIndex/FederatedIndex)."""
+        return getattr(self.store, "pin", None) is not None
+
+    @property
     def tombstones(self) -> set:
         """Tombstoned item ids (a copy; mutate via ``delete``)."""
         return set(self._tombstones)

@@ -1128,9 +1128,28 @@ class AsyncPrefetchStore:
     ``get_node``/``get_nodes`` for the same key joins the in-flight future
     instead of touching the disk again.  The traversal uses this to load
     the frontier's children while distance math runs.
+
+    Speculation is throttled by its own measured accuracy: once the
+    ``IOStats`` hit rate (``prefetch_hits / prefetch_issued``, which
+    includes the cache-level was-it-ever-used attribution) drops below
+    ``hit_rate_threshold`` after a ``warmup`` of issues, new batches are
+    suppressed — except an occasional probe (1 in ``probe_every``) so the
+    rate can recover when the access pattern changes.  Independently,
+    in-flight speculative bytes are capped at ``max_inflight_bytes`` so a
+    burst of never-consumed reads cannot queue unbounded wasted I/O.
     """
 
-    def __init__(self, inner, *, workers: int = 4, max_inflight: int = 128):
+    def __init__(
+        self,
+        inner,
+        *,
+        workers: int = 4,
+        max_inflight: int = 128,
+        hit_rate_threshold: float = 0.75,
+        warmup: int = 16,
+        probe_every: int = 32,
+        max_inflight_bytes: int = 4 << 20,
+    ):
         self.inner = inner
         self.backend = f"{inner.backend}+prefetch"
         self._ex = ThreadPoolExecutor(max_workers=workers, thread_name_prefix="store-prefetch")
@@ -1139,6 +1158,16 @@ class AsyncPrefetchStore:
         self.prefetch_issued = 0
         self.prefetch_hits = 0
         self._max_inflight = max_inflight
+        self.hit_rate_threshold = float(hit_rate_threshold)
+        self.warmup = int(warmup)
+        self.probe_every = int(probe_every)
+        self.max_inflight_bytes = int(max_inflight_bytes)
+        self.prefetch_suppressed = 0  # keys skipped by the accuracy gate
+        self._suppressed_batches = 0
+        self._inflight_bytes = 0
+        self._charged: dict = {}  # key -> bytes charged against the in-flight cap
+        # per-node size estimate for the byte cap; refined from completed reads
+        self._node_bytes_est = int(getattr(inner, "block_bytes", 0) or 16384)
 
     @property
     def io(self) -> IOStats:
@@ -1148,6 +1177,33 @@ class AsyncPrefetchStore:
         if name == "inner":  # pre-__init__ lookups must not recurse
             raise AttributeError(name)
         return getattr(self.inner, name)
+
+    @property
+    def hit_rate(self) -> float:
+        """Measured prefetch accuracy so far (1.0 before anything issued)."""
+        io = self.inner.io
+        return io.prefetch_hits / io.prefetch_issued if io.prefetch_issued else 1.0
+
+    def _gate(self) -> str:
+        """Accuracy gate, lock held: ``open`` | ``probe`` | ``closed``.
+
+        ``probe`` (1 in ``probe_every`` suppressed batches) admits only the
+        nearest key, keeping a trickle of measurements alive so the rate
+        can recover when the access pattern changes."""
+        io = self.inner.io
+        if io.prefetch_issued < self.warmup:
+            return "open"
+        if io.prefetch_hits >= self.hit_rate_threshold * io.prefetch_issued:
+            return "open"
+        self._suppressed_batches += 1
+        if self._suppressed_batches >= self.probe_every:
+            self._suppressed_batches = 0
+            return "probe"
+        return "closed"
+
+    def _drop(self, key) -> None:
+        """Forget a future's in-flight byte charge, lock held."""
+        self._inflight_bytes -= self._charged.pop(key, 0)
 
     def prefetch(self, keys: list, on_node=None) -> None:
         """Schedule background reads for ``keys``.
@@ -1162,18 +1218,36 @@ class AsyncPrefetchStore:
         with self._lock:
             if self._ex is None:
                 return
-            for key in keys:
+            gate = self._gate()
+            if gate == "closed":
+                self.prefetch_suppressed += len(keys)
+                return
+            if gate == "probe":
+                self.prefetch_suppressed += len(keys) - 1
+                keys = keys[:1]
+            for n_taken, key in enumerate(keys):
                 if key in self._futures:
                     continue
+                if self._inflight_bytes + self._node_bytes_est > self.max_inflight_bytes:
+                    self.prefetch_suppressed += len(keys) - n_taken
+                    break
                 if len(self._futures) >= self._max_inflight:
                     # drop consumed-done entries first; if still full, skip
                     done = [k for k, f in self._futures.items() if f.done()]
                     for k in done[: len(self._futures) - self._max_inflight + 1]:
-                        del self._futures[k]
+                        fut = self._futures.pop(k)
+                        self._drop(k)
+                        if not fut.cancelled() and fut.exception() is None:
+                            emb, ids = fut.result()  # read, never consumed
+                            self.inner.io.count_prefetch(
+                                wasted_bytes=emb.nbytes + ids.nbytes
+                            )
                     if len(self._futures) >= self._max_inflight:
                         break
                 f = self._ex.submit(self.inner.get_node, *key)
                 self._futures[key] = f
+                self._charged[key] = self._node_bytes_est
+                self._inflight_bytes += self._node_bytes_est
                 self.prefetch_issued += 1
                 self.inner.io.count_prefetch(issued=1)
                 submitted.append((key, f))
@@ -1183,10 +1257,18 @@ class AsyncPrefetchStore:
             # registered OUTSIDE the lock: a completed future runs the
             # callback inline, and the callback takes the lock itself
             def _done(fut, key=key):
+                # whoever pops the key owns delivery: if a demand read (or
+                # eviction/close) already popped it, the payload was consumed
+                # (and counted) there — delivering to the sink as well would
+                # double-count the hit and later flush it as wasted
                 with self._lock:
-                    self._futures.pop(key, None)
-                if not fut.cancelled() and fut.exception() is None:
-                    on_node(key, fut.result())
+                    owned = self._futures.pop(key, None) is not None
+                    self._drop(key)
+                if owned and not fut.cancelled() and fut.exception() is None:
+                    emb, ids = fut.result()
+                    # refine the per-node size estimate from real payloads
+                    self._node_bytes_est = max(1, (emb.nbytes + ids.nbytes))
+                    on_node(key, (emb, ids))
 
             f.add_done_callback(_done)
 
@@ -1204,17 +1286,26 @@ class AsyncPrefetchStore:
 
     def _pop(self, key):
         with self._lock:
-            return self._futures.pop(key, None)
+            f = self._futures.pop(key, None)
+            if f is not None:
+                self._drop(key)
+            return f
 
     def get_node(self, level: int, node: int) -> tuple[np.ndarray, np.ndarray]:
-        f = self._pop((level, node))
-        if f is not None:
-            self.prefetch_hits += 1
-            self.inner.io.count_prefetch(hits=1)
-            return f.result()
+        # racy-but-safe emptiness check: when the throttle has the gate
+        # closed there is usually nothing in flight, and demand reads
+        # should not pay the lock on every node
+        if self._futures:
+            f = self._pop((level, node))
+            if f is not None:
+                self.prefetch_hits += 1
+                self.inner.io.count_prefetch(hits=1)
+                return f.result()
         return self.inner.get_node(level, node)
 
     def get_nodes(self, keys: list) -> list:
+        if not self._futures:  # same fast path as get_node
+            return self.inner.get_nodes(keys)
         out: list = [None] * len(keys)
         missing, missing_i = [], []
         for i, key in enumerate(keys):
@@ -1266,6 +1357,8 @@ class AsyncPrefetchStore:
         with self._lock:
             ex, self._ex = self._ex, None
             self._futures.clear()
+            self._charged.clear()
+            self._inflight_bytes = 0
         if ex is not None:
             ex.shutdown(wait=False)
         self.inner.close()
@@ -1303,6 +1396,27 @@ def open_store(
             if p.is_file() or (p / BLOB_FILENAME).is_file():
                 backend = "blob"
             else:
+                if p.is_dir() and not create and not (p / ".zgroup").exists():
+                    # a directory that is not itself an index but HOLDS
+                    # index-looking children is almost certainly a shard
+                    # collection missing its federation manifest — say so
+                    # instead of failing deep inside the fstore parser
+                    shards = sorted(
+                        c.name
+                        for c in p.iterdir()
+                        if (c.is_file() and c.suffix == ".blob")
+                        or (c.is_dir() and ((c / BLOB_FILENAME).is_file() or (c / ".zgroup").exists()))
+                    )
+                    if shards:
+                        raise ValueError(
+                            f"{p} is not an index: it contains what look like "
+                            f"per-shard index files ({', '.join(shards[:4])}"
+                            f"{', ...' if len(shards) > 4 else ''}) but no "
+                            "federation manifest.  To open them as one "
+                            "federated index, write a 'federation.json' "
+                            "manifest (repro.core.federation.FederationManifest) "
+                            "or open a single shard path directly."
+                        )
                 backend = "fstore"
         if backend == "fstore":
             store = FStoreBackend(p, create=create)

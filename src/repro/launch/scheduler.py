@@ -290,7 +290,13 @@ class RequestScheduler:
         self.policy = policy if policy is not None else DeadlinePolicy()
         self.default_b = int(default_b)
         self.stats = SchedulerStats()
-        pinnable = getattr(getattr(index, "store", None), "pin", None) is not None
+        # snapshot isolation needs a generation-pinning index: either it
+        # says so itself (ECPIndex / FederatedIndex expose
+        # supports_snapshot) or its raw store pins (blob behind a bare
+        # searcher)
+        pinnable = getattr(index, "supports_snapshot", False) or (
+            getattr(getattr(index, "store", None), "pin", None) is not None
+        )
         self.snapshots = (
             SnapshotManager(index)
             if pinnable and hasattr(index, "snapshot")

@@ -1,0 +1,579 @@
+"""Shard federation: one logical eCP index over many blob files.
+
+Covers the subsystem's contract (core/federation.py): manifest
+round-trip and discovery, ``open_index`` auto-detection, effort
+conservation in ``allocate_effort``, scatter-gather search parity and
+incremental continuation, routed inserts / fan-out deletes / per-shard
+compaction, snapshot stability under live writes, live topology changes
+(adopt/evict/refresh), serving-stack integration, and the
+``MultiIndexSession`` at federation scale (many indexes under one tight
+shared byte budget).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ECPBuildConfig,
+    FederatedIndex,
+    MultiIndexSession,
+    build_federation,
+    build_index,
+    convert,
+    open_index,
+)
+from repro.core.federation import (
+    MANIFEST_FILENAME,
+    FederationManifest,
+    allocate_effort,
+    find_manifest,
+)
+from repro.data import clustered_vectors
+
+DIM = 24
+N = 3000
+CFG = ECPBuildConfig(levels=2, cluster_cap=80, metric="l2")
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    """One 4-shard federation + the same data as a single blob index."""
+    td = tmp_path_factory.mktemp("fed")
+    data, _ = clustered_vectors(0, n=N, dim=DIM, n_clusters=24)
+    root = build_federation(data, td / "fed", n_shards=4, cfg=CFG)
+    build_index(data, str(td / "single"), CFG)
+    blob = str(convert(str(td / "single"), td / "single.blob"))
+    return {"td": td, "data": data, "root": root, "single_blob": blob}
+
+
+@pytest.fixture()
+def fed(built):
+    f = FederatedIndex(built["root"])
+    yield f
+    f.close()
+
+
+@pytest.fixture()
+def mutable_root(built, tmp_path):
+    """A throwaway copy of the federation for mutation tests."""
+    import shutil
+
+    root = tmp_path / "fed"
+    shutil.copytree(built["root"], root)
+    return root
+
+
+# ---------------------------------------------------------------- manifest
+def test_manifest_roundtrip(built, tmp_path):
+    m = FederationManifest.load(built["root"])
+    assert m.dim == DIM and m.metric == "l2" and len(m.shards) == 4
+    m2 = FederationManifest.from_json(m.to_json())
+    assert m2.to_json() == m.to_json()
+    p = m2.save(tmp_path)
+    assert p.name == MANIFEST_FILENAME
+    assert FederationManifest.load(tmp_path).to_json() == m.to_json()
+    # the on-disk form is plain JSON an external tool can read
+    d = json.loads(p.read_text())
+    assert {e["name"] for e in d["shards"]} == {f"shard_{i:04d}" for i in range(4)}
+
+
+def test_find_manifest(built, tmp_path):
+    root = built["root"]
+    assert find_manifest(root) == root / MANIFEST_FILENAME
+    assert find_manifest(root / MANIFEST_FILENAME) == root / MANIFEST_FILENAME
+    assert find_manifest(tmp_path) is None
+    assert find_manifest(built["single_blob"]) is None
+
+
+def test_open_index_autodetects_federation(built):
+    with open_index(built["root"]) as f:
+        assert isinstance(f, FederatedIndex)
+        assert len(f.shard_names) == 4
+    with pytest.raises(ValueError, match="mode='file'"):
+        open_index(built["root"], mode="packed")
+
+
+def test_open_without_manifest_raises(tmp_path):
+    with pytest.raises(FileNotFoundError, match=MANIFEST_FILENAME):
+        FederatedIndex(tmp_path)
+
+
+def test_manifest_with_no_shards_raises(tmp_path):
+    FederationManifest(metric="l2", dim=DIM, dtype="float32", shards=[]).save(tmp_path)
+    with pytest.raises(ValueError, match="no shards"):
+        FederatedIndex(tmp_path)
+
+
+# ---------------------------------------------------------- effort splitting
+def test_allocate_effort_conserves_exactly():
+    rng = np.random.default_rng(0)
+    d = rng.random(64)
+    owner = rng.integers(0, 4, 64)
+    for b in (1, 2, 3, 5, 8, 13, 24, 64, 100):
+        probe, alloc = allocate_effort(d, owner, b, b_min=1)
+        assert alloc.sum() == b
+        assert (alloc >= 1).all()
+        assert len(probe) == len(set(probe.tolist())) == len(alloc)
+
+
+def test_allocate_effort_edge_cases():
+    d = np.array([0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8])
+    owner = np.array([0, 0, 1, 1, 2, 2, 3, 3])
+    # b too small to fund 2 shards at b_min=2 -> single probed shard gets all
+    probe, alloc = allocate_effort(d, owner, 3, b_min=2)
+    assert alloc.tolist() == [3] and probe.tolist() == [0]
+    probe, alloc = allocate_effort(d, owner, 1)
+    assert alloc.tolist() == [1]
+    # floor: every probed shard gets at least b_min
+    probe, alloc = allocate_effort(d, owner, 16, b_min=4)
+    assert alloc.sum() == 16 and (alloc >= 4).all() and len(alloc) == 4
+    # top_m cap: at most m shards probed, still conserved and floored
+    probe, alloc = allocate_effort(d, owner, 7, b_min=2, top_m=2)
+    assert alloc.sum() == 7 and len(alloc) <= 2 and (alloc >= 2).all()
+    with pytest.raises(ValueError):
+        allocate_effort(np.array([]), np.array([]), 4)
+    with pytest.raises(ValueError):
+        allocate_effort(d, owner[:4], 4)
+
+
+def test_allocate_effort_concentrates_on_semantic_signal():
+    # shard 0 owns all the near centroids: it must get the lion's share
+    d = np.array([0.01, 0.02, 0.03, 0.04, 5.0, 6.0, 7.0, 8.0])
+    owner = np.array([0, 0, 0, 0, 1, 2, 3, 3])
+    probe, alloc = allocate_effort(d, owner, 4)
+    assert probe[0] == 0 and alloc[0] == alloc.max()
+    assert alloc.sum() == 4
+
+
+def test_search_effort_conserved_and_floored(fed, built):
+    q = built["data"][7]
+    for b in (3, 5, 8, 24):
+        rs = fed.search(q, k=10, b=b)
+        alloc = rs.query.allocation
+        assert sum(alloc.values()) == b
+        assert all(v >= fed.b_min for v in alloc.values())
+        rs.query.close()
+
+
+# ------------------------------------------------------------------ search
+def test_single_shard_federation_matches_plain_index(built, tmp_path):
+    data = built["data"]
+    root = build_federation(data, tmp_path / "fed1", n_shards=1, cfg=CFG)
+    with open_index(root) as f, open_index(
+        built["single_blob"], mode="file", backend="blob"
+    ) as single:
+        assert len(f.shard_names) == 1
+        for q in data[::700]:
+            rs_f = f.search(q, k=10, b=12)
+            rs_s = single.search(q, k=10, b=12)
+            # one shard holds everything: scatter-gather must degenerate
+            # to the plain traversal bit-for-bit
+            np.testing.assert_array_equal(rs_f.ids, rs_s.ids)
+            np.testing.assert_array_equal(rs_f.dists, rs_s.dists)
+            rs_f.query.close()
+            rs_s.query.close()
+
+
+def test_results_sorted_and_ids_valid(fed, built):
+    rs = fed.search(built["data"][42], k=20, b=16)
+    dists = np.asarray(rs.dists).ravel()
+    ids = np.asarray(rs.ids).ravel()
+    assert (np.diff(dists) >= 0).all()
+    assert len(set(ids.tolist())) == len(ids)
+    assert ((ids >= 0) & (ids < fed.info.next_id)).all()
+    rs.query.close()
+
+
+def test_incremental_continuation_no_overlap(fed, built):
+    rs1 = fed.search(built["data"][5], k=10, b=24)
+    first = set(int(i) for i in np.asarray(rs1.ids).ravel())
+    rs2 = rs1.query.next(10)
+    second = set(int(i) for i in np.asarray(rs2.ids).ravel())
+    assert second, "continuation returned nothing"
+    assert not (first & second), "next(k) re-returned already-delivered ids"
+    # continuation never returns anything closer than the first page's tail
+    assert np.asarray(rs2.dists).ravel()[0] >= np.asarray(rs1.dists).ravel()[-1]
+    rs1.query.close()
+
+
+def test_batch_search(fed, built):
+    Q = built["data"][:6]
+    rs = fed.search(Q, k=8, b=12)
+    assert np.asarray(rs.ids).shape == (6, 8)
+    alloc = rs.query.allocation
+    assert isinstance(alloc, list) and len(alloc) == 6
+    assert all(sum(a.values()) == 12 for a in alloc)
+    per = rs.query.shard_stats
+    assert isinstance(per, list) and len(per) == 6
+    rs.query.close()
+
+
+def test_per_shard_stats_sum_to_aggregate(fed, built):
+    rs = fed.search(built["data"][3], k=10, b=16)
+    per = rs.query.shard_stats
+    assert set(per) == set(rs.query.allocation)
+    for field in ("leaves_opened", "distance_calcs", "node_loads"):
+        assert getattr(rs.stats, field) == sum(
+            getattr(st, field) for st in per.values()
+        )
+    assert rs.stats.io.bytes_read == sum(st.io.bytes_read for st in per.values())
+    rs.query.close()
+
+
+def test_federation_recall_close_to_single(fed, built):
+    data = built["data"]
+    rng = np.random.default_rng(11)
+    queries = data[rng.integers(0, N, 32)]
+    from repro.core.distances import np_distances
+
+    gt = np.argsort(np_distances(queries, data, "l2"), axis=1, kind="stable")[:, :10]
+    with open_index(built["single_blob"], mode="file", backend="blob") as single:
+        def recall(idx):
+            hits = 0
+            for q, g in zip(queries, gt):
+                rs = idx.search(q, k=10, b=24)
+                hits += len(set(rs.row_ids(0)) & set(int(x) for x in g))
+                rs.query.close()
+            return hits / (len(queries) * 10)
+
+        r_fed, r_single = recall(fed), recall(single)
+    assert r_fed >= r_single - 0.05, (r_fed, r_single)
+
+
+# --------------------------------------------------------------- mutation
+def test_insert_routes_and_is_searchable(mutable_root):
+    with FederatedIndex(mutable_root) as f:
+        rng = np.random.default_rng(2)
+        base = f.info.next_id
+        gen0 = f.info.generation
+        vecs = rng.normal(size=(32, DIM)).astype(np.float32)
+        out = f.insert(vecs)
+        assert out["inserted"] == 32
+        assert sum(out["per_shard"].values()) == 32
+        assert set(out["per_shard"]) <= set(f.shard_names)
+        assert f.info.next_id == base + 32
+        assert f.info.generation > gen0
+        # every inserted vector findable at its exact location
+        for i in (0, 13, 31):
+            rs = f.search(vecs[i], k=1, b=8)
+            assert int(np.asarray(rs.ids).ravel()[0]) == base + i
+            rs.query.close()
+    # the republished manifest names the new state for external readers
+    m = FederationManifest.load(mutable_root)
+    assert sum(e.get("n_items", 0) for e in m.shards) == N + 32
+
+
+def test_insert_spills_off_overloaded_shard(mutable_root):
+    with FederatedIndex(mutable_root, balance_factor=1.05) as f:
+        rng = np.random.default_rng(3)
+        # slam one region: without spill the nearest shard would absorb all
+        q = rng.normal(size=DIM).astype(np.float32)
+        vecs = np.repeat(q[None, :], 400, axis=0) + 0.01 * rng.normal(
+            size=(400, DIM)
+        ).astype(np.float32)
+        out = f.insert(vecs)
+        counts = [f.shard(n).info.n_items for n in f.shard_names]
+        assert sum(out["per_shard"].values()) == 400
+        # balance held: no shard exceeds the configured factor of the mean
+        assert max(counts) <= 1.05 * (sum(counts) / len(counts)) + 1, counts
+
+
+def test_insert_validates_shapes(fed):
+    with pytest.raises(ValueError, match="vectors must be"):
+        fed.insert(np.zeros((2, DIM + 1), np.float32))
+    with pytest.raises(ValueError, match="ids must be"):
+        fed.insert(np.zeros((2, DIM), np.float32), ids=np.arange(3))
+
+
+def test_delete_fans_out_and_compact_purges(mutable_root):
+    with FederatedIndex(mutable_root) as f:
+        victim_ids = np.arange(0, 50, 5)
+        n_live0 = f.info.n_items - len(f.tombstones)
+        added = f.delete(victim_ids)
+        assert added == len(victim_ids)
+        assert set(int(i) for i in victim_ids) <= f.tombstones
+        for v in victim_ids[:3]:
+            rs = f.search(np.zeros(DIM, np.float32), k=50, b=24)
+            assert int(v) not in set(rs.row_ids(0))
+            rs.query.close()
+        gen = f.info.generation
+        out = f.compact()
+        assert set(out["shards"]) == set(f.shard_names)
+        assert not f.tombstones
+        assert f.info.generation > gen
+        assert f.info.n_items == n_live0 - len(victim_ids)
+        # still searchable post-rewrite
+        rs = f.search(np.zeros(DIM, np.float32), k=5, b=8)
+        assert len(rs.row_ids(0)) == 5
+        rs.query.close()
+
+
+def test_compact_single_shard(mutable_root):
+    with FederatedIndex(mutable_root) as f:
+        name = f.shard_names[0]
+        gen = f.shard(name).info.generation
+        out = f.compact_shard(name)
+        assert out["generation"] > gen or out["purged"] == 0
+        with pytest.raises(KeyError):
+            f.compact_shard("nope")
+
+
+def test_snapshot_stable_under_live_writes(mutable_root):
+    with FederatedIndex(mutable_root) as f:
+        q = np.zeros(DIM, np.float32)
+        snap = f.snapshot()
+        rs0 = snap.search(q, k=10, b=16)
+        ids0, d0 = np.asarray(rs0.ids).copy(), np.asarray(rs0.dists).copy()
+        rs0.query.close()
+        rng = np.random.default_rng(4)
+        f.insert(0.01 * rng.normal(size=(64, DIM)).astype(np.float32))
+        f.delete(np.asarray(ids0).ravel()[:3])
+        # the pinned view must not move, bit for bit
+        rs1 = snap.search(q, k=10, b=16)
+        np.testing.assert_array_equal(rs1.ids, ids0)
+        np.testing.assert_array_equal(rs1.dists, d0)
+        rs1.query.close()
+        snap.close()
+        # the live view did move
+        rs2 = f.search(q, k=10, b=16)
+        assert set(np.asarray(rs2.ids).ravel()) != set(ids0.ravel())
+        rs2.query.close()
+
+
+# ---------------------------------------------------------------- topology
+def test_adopt_and_evict_shard(mutable_root, tmp_path):
+    rng = np.random.default_rng(5)
+    extra = rng.normal(size=(300, DIM)).astype(np.float32)
+    with FederatedIndex(mutable_root) as f:
+        base = f.info.next_id
+        build_index(
+            extra, str(tmp_path / "x"), CFG,
+            item_ids=np.arange(base, base + 300),
+        )
+        blob = convert(str(tmp_path / "x"), tmp_path / "extra.blob")
+        name = f.adopt_shard(blob)
+        assert name == "extra" and name in f.shard_names
+        assert f.info.n_items >= N + 300
+        # b large enough that the off-distribution shard wins router votes
+        rs = f.search(extra[0], k=1, b=32)
+        assert "extra" in rs.query.allocation
+        assert int(np.asarray(rs.ids).ravel()[0]) == base
+        rs.query.close()
+        # the manifest on disk now names 5 shards
+        assert len(FederationManifest.load(mutable_root).shards) == 5
+        info = f.evict_shard(name)
+        assert info.n_items == 300
+        assert name not in f.shard_names
+        assert len(FederationManifest.load(mutable_root).shards) == 4
+        with pytest.raises(KeyError):
+            f.evict_shard(name)
+
+
+def test_adopt_rejects_dim_mismatch(fed, tmp_path):
+    data, _ = clustered_vectors(9, n=200, dim=DIM + 8, n_clusters=4)
+    build_index(data, str(tmp_path / "bad"), CFG)
+    blob = convert(str(tmp_path / "bad"), tmp_path / "bad.blob")
+    with pytest.raises(ValueError, match="dim"):
+        fed.adopt_shard(blob)
+    assert "bad" not in fed.shard_names
+
+
+def test_evict_last_shard_refused(built, tmp_path):
+    root = build_federation(built["data"][:500], tmp_path / "f1", n_shards=1, cfg=CFG)
+    with FederatedIndex(root) as f:
+        with pytest.raises(ValueError, match="last shard"):
+            f.evict_shard(f.shard_names[0])
+
+
+def test_refresh_sees_external_writer(mutable_root):
+    reader = FederatedIndex(mutable_root)
+    writer = FederatedIndex(mutable_root)
+    try:
+        gen0 = reader.info.generation
+        rng = np.random.default_rng(6)
+        vecs = rng.normal(size=(16, DIM)).astype(np.float32)
+        base = writer.info.next_id
+        writer.insert(vecs)
+        # the reader is stale until it polls
+        assert reader.info.generation == gen0
+        reader.refresh()
+        assert reader.info.generation > gen0
+        assert reader.info.next_id == base + 16
+        rs = reader.search(vecs[0], k=1, b=8)
+        assert int(np.asarray(rs.ids).ravel()[0]) == base
+        rs.query.close()
+    finally:
+        reader.close()
+        writer.close()
+
+
+# ------------------------------------------------------------- serving stack
+def test_server_integration(mutable_root, built):
+    from repro.launch.serve import Server
+
+    fed = FederatedIndex(mutable_root)
+    q = built["data"][1]
+    with Server(fed, workers=2, queue_depth=16) as srv:
+        rs, sid = srv.search(q, k=10, b=12)
+        assert len(rs.row_ids(0)) == 10
+        srv.close(sid)
+        base = int(fed.info.next_id)
+        srv.insert(
+            np.random.default_rng(8).normal(size=(24, DIM)).astype(np.float32),
+            np.arange(base, base + 24),
+        )
+        assert fed.info.next_id == base + 24
+        fut = fed.compact_async(scheduler=srv.scheduler)
+        out = fut.result(timeout=60)
+        assert set(out["shards"]) == set(fed.shard_names)
+        st = srv.scheduler.stats.as_dict()
+        assert st["submitted"] == st["completed"] + st["rejected"] + st["failed"]
+
+
+# ------------------------------------------- MultiIndexSession at fleet scale
+def _open_fleet(sess, built, n=8):
+    """>=8 file-mode indexes under ONE shared budget: each federation
+    shard blob opened twice under distinct names."""
+    shard_blobs = sorted(Path(built["root"]).glob("*.blob"))
+    assert len(shard_blobs) == 4
+    names = []
+    for rep in range(n // len(shard_blobs)):
+        for p in shard_blobs:
+            name = f"{p.stem}@{rep}"
+            sess.open(str(p), name, backend="blob")
+            names.append(name)
+    return names
+
+
+def test_session_federation_scale_shared_budget(built):
+    # budget fits ~2.5 indexes' working sets: the fleet must still serve
+    # correct results while evicting globally-LRU across all 8 indexes
+    sess = MultiIndexSession(cache_bytes=64 << 20)
+    try:
+        names = _open_fleet(sess, built, n=8)
+        assert len(names) == 8 and sorted(sess.names()) == sorted(names)
+        q = built["data"][0]
+        sess.search(names[0], q, k=5, b=6).query.close()
+        one = sess.stats()["per_index"][names[0]]["bytes"]
+        assert one > 0
+        sess.resize(cache_bytes=int(2.5 * one))
+        for _ in range(3):  # round-robin: everyone churns the one cache
+            for nm in names:
+                rs = sess.search(nm, q, k=5, b=6)
+                assert len(rs.row_ids(0)) == 5
+                rs.query.close()
+        st = sess.stats()
+        assert st["resident_bytes"] <= st["budget_bytes"]
+        assert st["evictions"] > 0, "tight budget never evicted"
+        per = st["per_index"]
+        assert set(per) == set(names)
+        assert sum(v["bytes"] for v in per.values()) == st["resident_bytes"]
+        # fairness: the budget is shared, not monopolized — with a
+        # round-robin workload more than one index stays resident and
+        # nobody holds the entire budget
+        resident = [nm for nm, v in per.items() if v["nodes"] > 0]
+        assert len(resident) >= 2, per
+        assert max(v["bytes"] for v in per.values()) < st["budget_bytes"], per
+    finally:
+        sess.close()
+
+
+def test_session_resize_shrinks_fleet_live(built):
+    sess = MultiIndexSession(cache_bytes=64 << 20)
+    try:
+        names = _open_fleet(sess, built, n=8)
+        q = built["data"][9]
+        for nm in names:
+            sess.search(nm, q, k=5, b=8).query.close()
+        before = sess.stats()["resident_bytes"]
+        assert before > 0
+        shrunk = max(1, before // 8)
+        sess.resize(cache_bytes=shrunk)
+        st = sess.stats()
+        assert st["resident_bytes"] <= shrunk < before
+        for nm in names:  # fleet still serves after the shrink
+            rs = sess.search(nm, q, k=5, b=6)
+            assert len(rs.row_ids(0)) == 5
+            rs.query.close()
+    finally:
+        sess.close()
+
+
+def test_session_invalidate_after_external_writer(built, tmp_path):
+    import shutil
+
+    blob = tmp_path / "shared.blob"
+    shutil.copy(sorted(Path(built["root"]).glob("*.blob"))[0], blob)
+    sess = MultiIndexSession(cache_bytes=1 << 20)
+    try:
+        idx = sess.open(str(blob), "shared", backend="blob")
+        sess.search("shared", built["data"][0], k=5, b=6).query.close()
+        gen0 = idx.info.generation
+        # an external process mutates the file behind the session's back
+        with open_index(str(blob), mode="file", backend="blob") as writer:
+            base = writer.info.next_id
+            writer.insert(
+                np.random.default_rng(10).normal(size=(8, DIM)).astype(np.float32),
+                ids=np.arange(base, base + 8),
+            )
+        assert idx.info.generation == gen0  # stale until invalidated
+        sess.invalidate("shared")
+        assert idx.info.generation > gen0
+        assert idx.info.next_id == base + 8
+    finally:
+        sess.close()
+
+
+def test_session_close_releases_fds(built):
+    def n_fds():
+        return len(os.listdir("/proc/self/fd"))
+
+    base = n_fds()
+    sess = MultiIndexSession(cache_bytes=1 << 20)
+    names = _open_fleet(sess, built, n=8)
+    for nm in names:
+        sess.search(nm, built["data"][2], k=3, b=4).query.close()
+    assert n_fds() >= base + 8  # every blob holds an fd while open
+    sess.close()
+    assert n_fds() <= base + 1, "close() leaked store fds"
+
+
+def test_session_opens_whole_federation(built):
+    # a federation root opened through the session shares the budget too
+    sess = MultiIndexSession(cache_bytes=2 << 20)
+    try:
+        f = sess.open(str(built["root"]), "fed", backend="blob")
+        assert isinstance(f, FederatedIndex)
+        rs = sess.search("fed", built["data"][4], k=10, b=12)
+        assert len(rs.row_ids(0)) == 10
+        rs.query.close()
+        per = sess.stats()["per_index"]["fed"]
+        assert per["bytes"] > 0, "federation shards bypassed the shared cache"
+    finally:
+        sess.close()
+
+
+# ------------------------------------------------------------ replica demo
+def test_replica_readers_demo_smoke():
+    """The multi-process demo is itself a cross-process invariant check:
+    run it CI-sized and require a clean exit."""
+    repo = Path(__file__).resolve().parents[1]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(repo / "src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    r = subprocess.run(
+        [sys.executable, str(repo / "examples" / "replica_readers.py"), "--smoke"],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=300,
+    )
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "replica demo OK" in r.stdout

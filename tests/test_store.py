@@ -468,3 +468,108 @@ def test_prefetch_wrapper_invalidates_inflight_on_write(built, tmp_path):
     e2, i2 = ps.get_node(2, 6)  # must NOT be the stale prefetched payload
     assert len(i2) == len(i) + 1 and 90009 in i2
     ps.close()
+
+
+# ------------------------------------------------------- accuracy throttle
+def test_prefetch_throttle_gate_lifecycle(built):
+    """Issued-but-never-consumed prefetches must close the accuracy gate
+    (suppressing whole batches), a probe trickle must keep measuring, and
+    consuming the backlog must reopen the gate."""
+    _, _, blob = built
+    ps = AsyncPrefetchStore(
+        open_store(blob, backend="blob"),
+        warmup=4, hit_rate_threshold=0.75, probe_every=3,
+    )
+    assert ps.hit_rate == 1.0  # vacuously accurate before anything issued
+
+    ps.prefetch([(2, j) for j in range(8)])  # past warmup, zero consumed
+    ps.drain()
+    assert ps.prefetch_issued == 8 and ps.hit_rate == 0.0
+
+    # gate closed: whole batches suppressed, nothing new issued
+    ps.prefetch([(2, 8), (2, 9)])
+    ps.prefetch([(2, 10), (2, 11)])
+    assert ps.prefetch_issued == 8
+    assert ps.prefetch_suppressed == 4
+
+    # 3rd suppressed batch is the probe: exactly ONE key admitted
+    ps.prefetch([(2, 12), (2, 13), (2, 14)])
+    ps.drain()
+    assert ps.prefetch_issued == 9
+    assert ps.prefetch_suppressed == 6
+    assert (2, 12) in ps._futures and (2, 13) not in ps._futures
+
+    # consume the backlog: rate recovers above threshold, gate reopens
+    for key in [(2, j) for j in range(8)] + [(2, 12)]:
+        ps.get_node(*key)
+    assert ps.prefetch_hits == 9 and ps.hit_rate == 1.0
+    ps.prefetch([(2, 15), (2, 16)])
+    assert ps.prefetch_issued == 11
+    ps.close()
+
+
+def test_prefetch_throttle_byte_cap(built):
+    """The in-flight byte budget bounds speculation even with the gate
+    open: submissions stop (and count as suppressed) at the cap."""
+    _, _, blob = built
+    inner = open_store(blob, backend="blob")
+    ps = AsyncPrefetchStore(inner, max_inflight_bytes=1)
+    ps.prefetch([(2, j) for j in range(5)])
+    assert ps.prefetch_issued == 0 and ps.prefetch_suppressed == 5
+    # demand reads still work, they just pay the inner store directly
+    e, i = ps.get_node(2, 0)
+    e1, i1 = open_store(blob, backend="blob").get_node(2, 0)
+    np.testing.assert_array_equal(e, e1)
+    ps.close()
+
+
+def test_prefetch_sink_delivery_not_double_counted(built):
+    """Owner semantics: a payload delivered to the on_node sink must not
+    ALSO count as a wrapper hit on a later demand read, nor be flushed as
+    wasted — whoever pops the future owns (and counts) it exactly once."""
+    import time
+
+    _, _, blob = built
+    ps = open_store(blob, prefetch=True)
+    got = {}
+    ps.prefetch([(2, 4)], on_node=lambda k, v: got.__setitem__(k, v))
+    ps.drain()
+    for _ in range(200):
+        if got and not ps._futures:
+            break
+        time.sleep(0.005)
+    assert set(got) == {(2, 4)} and not ps._futures
+    io0 = ps.io.snapshot()
+    e, i = ps.get_node(2, 4)  # demand read AFTER delivery: plain inner read
+    assert ps.prefetch_hits == 0
+    assert ps.io.delta(io0).prefetch_hits == 0
+    assert ps.io.prefetch_wasted_bytes == 0
+    np.testing.assert_array_equal(e, got[(2, 4)][0])
+    ps.close()
+    assert ps.io.prefetch_wasted_bytes == 0  # delivered payloads never turn wasted
+
+
+def test_open_store_auto_shard_dir_error(built, tmp_path):
+    """backend="auto" on a directory of per-shard indexes (no federation
+    manifest) must say what it found and how to fix it, not fail deep in
+    the fstore parser."""
+    import shutil
+
+    _, path, blob = built
+    d = tmp_path / "shards"
+    d.mkdir()
+    shutil.copy(blob, d / "shard_0000.blob")
+    shutil.copy(blob, d / "shard_0001.blob")
+    with pytest.raises(ValueError) as ei:
+        open_store(d, backend="auto")
+    msg = str(ei.value)
+    assert "federation" in msg and "shard_0000.blob" in msg
+    # with the manifest present the same directory opens as a federation
+    from repro.core import open_index
+    from repro.core.federation import FederationManifest, discover_shards
+
+    m = FederationManifest(metric="l2", dim=24, dtype="float16",
+                          shards=discover_shards(d))
+    m.save(d)
+    with open_index(d) as fed:
+        assert sorted(fed.shard_names) == ["shard_0000", "shard_0001"]
