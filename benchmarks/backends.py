@@ -42,15 +42,35 @@ def compare(
     cache_bytes: int = 1 << 20,
     backends=("fstore", "blob", "blob+prefetch"),
     runs: int = 2,
+    quant_path: str | None = None,
 ) -> list[dict]:
-    """One row per backend: latency + IOStats under a byte-budgeted cache."""
+    """One row per backend: latency + IOStats under a byte-budgeted cache.
+
+    ``quant_path`` adds a ``quant`` row: the v3 blob searched through the
+    quantized scan + full-precision rerank (bit-identical results).  Note
+    this scenario is the quantized pipeline's WORST case and the row is
+    kept as its honest memory-pressure characterization: under a cache
+    budget far below the index's working set, the pipeline's resident
+    state (quant companions + per-leaf rerank row caches + promoted fp
+    nodes) evicts itself continuously, so the partial reads repeat and
+    the byte savings invert.  The pipeline's target regime — cold or
+    IO-bound batch scans with a sane cache — is measured by the
+    search-engine ``quant/flat-batch`` and ``frontier/*`` scenarios."""
     from repro.core import open_index
 
     rows = []
+    if quant_path is not None:
+        backends = tuple(backends) + ("quant",)
     for backend in backends:
-        path = ecp_path if backend == "fstore" else blob_path
+        if backend == "quant":
+            path, open_kw = quant_path, {"backend": "blob", "quantized": True}
+        else:
+            path, open_kw = (
+                ecp_path if backend == "fstore" else blob_path,
+                {"backend": backend},
+            )
         t0 = time.perf_counter()
-        idx = open_index(path, mode="file", backend=backend, cache_max_bytes=cache_bytes)
+        idx = open_index(path, mode="file", cache_max_bytes=cache_bytes, **open_kw)
         load_s = time.perf_counter() - t0
 
         with idx:  # close() frees the prefetch executor + store fd
@@ -95,7 +115,8 @@ def compare(
 
 def run(backends=("fstore", "blob", "blob+prefetch"), *, runs: int = 2) -> list[dict]:
     """The run.py scenario: compare backends over the shared bench suite
-    under a tight shared cache budget (memory-constrained setting)."""
+    under a tight shared cache budget (memory-constrained setting); the
+    quantized v3 blob rides along as the fourth row."""
     from .indexes import get_suite
 
     s = get_suite()
@@ -112,6 +133,7 @@ def run(backends=("fstore", "blob", "blob+prefetch"), *, runs: int = 2) -> list[
         cache_bytes=cache_bytes,
         backends=backends,
         runs=runs,
+        quant_path=s.ecp_quant_path,
     )
 
 
@@ -174,10 +196,15 @@ def _prefetch_regression_check(
 
 def smoke(n: int = 2000, dim: int = 16, n_queries: int = 16) -> None:
     """Tiny end-to-end parity check: build -> convert -> bit-identical
-    results on fstore, blob, and blob+prefetch; blob must issue fewer
+    results on fstore, blob, blob+prefetch, and the quantized v3 blob
+    (compressed scan + full-precision rerank); blob must issue fewer
     reads than fstore; blob+prefetch must no longer be slower than plain
     blob on the tight-cache comparison scenario (the throttle closes the
-    gate when measured accuracy is low).  Raises on any violation."""
+    gate when measured accuracy is low).  Raises on any violation.  (The
+    quantized path's >=2x cold-bytes gate runs at bench scale in
+    ``benchmarks.search_engine --smoke`` — at this toy scale the rerank
+    read granularity swamps the code-size savings, so only parity is
+    asserted here.)"""
     import tempfile
 
     from repro.core import ECPBuildConfig, build_index, convert, open_index
@@ -188,36 +215,45 @@ def smoke(n: int = 2000, dim: int = 16, n_queries: int = 16) -> None:
         path = td + "/idx"
         build_index(data, path, ECPBuildConfig(levels=2, cluster_cap=64))
         blob = str(convert(path, td + "/idx.blob"))
+        qblob = str(convert(path, td + "/idx.qblob", quant="int8"))
 
         rng = np.random.default_rng(7)
         qs = data[rng.integers(0, n, n_queries)]
         fidx = open_index(path, mode="file", backend="fstore")
         bidx = open_index(blob, mode="file", backend="blob")
         pidx = open_index(blob, mode="file", backend="blob", prefetch=True)
+        qidx = open_index(qblob, mode="file", backend="blob", quantized=True)
         f_io0 = fidx.store.io.snapshot()
         b_io0 = bidx.store.io.snapshot()
+        q_io0 = qidx.store.io.snapshot()
         for q in qs:
             rf = fidx.search(q, k=10, b=8)
             rb = bidx.search(q, k=10, b=8)
             rp = pidx.search(q, k=10, b=8)
+            rq = qidx.search(q, k=10, b=8)
             np.testing.assert_array_equal(rf.ids, rb.ids)
             np.testing.assert_array_equal(rf.dists, rb.dists)
             np.testing.assert_array_equal(rf.ids, rp.ids)
             np.testing.assert_array_equal(rf.dists, rp.dists)
+            np.testing.assert_array_equal(rf.ids, rq.ids)
+            np.testing.assert_array_equal(rf.dists, rq.dists)
         f_io = fidx.store.io.delta(f_io0)
         b_io = bidx.store.io.delta(b_io0)
+        q_io = qidx.store.io.delta(q_io0)
         assert b_io.reads_issued < f_io.reads_issued, (
             f"blob should issue fewer reads: blob={b_io} fstore={f_io}"
         )
         fidx.close()
         bidx.close()
         pidx.close()
+        qidx.close()
         _prefetch_regression_check(blob, data[rng.integers(0, n, 48)], k=50, b=12)
         print(
             f"backend smoke OK: {n_queries} queries bit-identical; "
             f"fstore reads={f_io.reads_issued} files={f_io.files_opened} "
             f"bytes={f_io.bytes_read} | blob reads={b_io.reads_issued} "
-            f"bytes={b_io.bytes_read}"
+            f"bytes={b_io.bytes_read} | quant reads={q_io.reads_issued} "
+            f"bytes={q_io.bytes_read}"
         )
 
 

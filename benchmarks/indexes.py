@@ -28,6 +28,7 @@ class BenchSuite:
     ds: MMIRDataset
     ecp_path: str
     ecp_blob_path: str
+    ecp_quant_path: str  # blob v3: int8 companion blocks (quantized scan)
     ecp_build_s: float
     ivf: IVFIndex
     ivf_build_s: float
@@ -40,7 +41,13 @@ class BenchSuite:
 
     def fresh_ecp(self, backend: str = "fstore", **kw) -> ECPIndex:
         """A cold file-mode searcher (empty node cache — 'disk' runs) over
-        the chosen storage backend: fstore | blob | blob+prefetch."""
+        the chosen storage backend: fstore | blob | blob+prefetch, plus
+        "quant" — the v3 blob driven through the quantized scan."""
+        if backend == "quant":
+            return open_index(
+                self.ecp_quant_path, mode="file", backend="blob",
+                quantized=True, **kw,
+            )
         if backend not in BACKENDS:
             raise ValueError(f"unknown eCP backend: {backend!r} ({'|'.join(BACKENDS)})")
         path = self.ecp_path if backend == "fstore" else self.ecp_blob_path
@@ -75,6 +82,9 @@ def get_suite(*, n_items=20000, dim=32, n_tasks=40, seed=0, workdir=None) -> Ben
     )
     ecp_build = time.time() - t0
     ecp_blob_path = str(convert(ecp_path, workdir / "ecp_index.blob"))
+    ecp_quant_path = str(
+        convert(ecp_path, workdir / "ecp_index.qblob", quant="int8")
+    )
 
     n_lists = max(32, n_items // 256)
     t0 = time.time()
@@ -90,7 +100,8 @@ def get_suite(*, n_items=20000, dim=32, n_tasks=40, seed=0, workdir=None) -> Ben
     vamana_build = time.time() - t0
 
     _SUITE = BenchSuite(
-        ds=ds, ecp_path=ecp_path, ecp_blob_path=ecp_blob_path, ecp_build_s=ecp_build,
+        ds=ds, ecp_path=ecp_path, ecp_blob_path=ecp_blob_path,
+        ecp_quant_path=ecp_quant_path, ecp_build_s=ecp_build,
         ivf=ivf, ivf_build_s=ivf_build, hnsw=hnsw, hnsw_build_s=hnsw_build,
         vamana=vamana, vamana_build_s=vamana_build, bf=BruteForce(ds.data),
         params={

@@ -114,6 +114,15 @@ def main() -> None:
         se,
     )
 
+    # recall/latency frontier over the effort knob b: what the quantized
+    # scan buys (or costs) at each recall point vs the plain blob path
+    fr = search_engine.run_frontier(runs=runs)
+    _print_table(
+        "Recall/latency frontier — quantized scan+rerank vs plain blob "
+        "batch path per effort b (recall@k vs exact top-k)",
+        fr,
+    )
+
     lc = lifecycle.run(runs=runs, n_insert=256 if args.fast else 512)
     _print_table(
         "Index lifecycle — build / insert-while-search / delete / compact "
@@ -189,16 +198,29 @@ def main() -> None:
             },
         )
     for r in se:
+        # quantized-pipeline rows live under quant/* so the perf
+        # trajectory of the compressed scan is trackable on its own
+        name = r["scenario"] if r["scenario"].startswith("quant/") else (
+            f"search-engine/{r['scenario']}"
+        )
         emit(
-            f"search-engine/{r['scenario']}",
+            name,
             r["us_per_call"],
             f"cold_us={r['cold_us_per_call']};vs_legacy={r['speedup_vs_legacy']}x;"
-            f"rounds={r['rounds']};dedup_hits={r['dedup_hits']}",
+            f"rounds={r['rounds']};dedup_hits={r['dedup_hits']};"
+            f"kernel_launches={r['kernel_launches']}",
             io={
                 "bytes_read": r["bytes_read"],
                 "files_opened": r["files_opened"],
                 "reads_issued": r["reads_issued"],
             },
+        )
+    for r in fr:
+        emit(
+            f"frontier/{r['scenario']}",
+            r["us_per_call"],
+            f"recall={r['recall']};bytes={r['bytes_read']}",
+            io={"bytes_read": r["bytes_read"], "reads_issued": r["reads_issued"]},
         )
     for r in lc:
         # us_per_call = per-vector cost of the lifecycle stage

@@ -11,11 +11,16 @@ Same index, same queries, three execution paths per storage backend:
                     B rows advance in lockstep, node demands are deduped
                     across rows and fetched with one coalescing
                     ``get_nodes`` per round
+  * quant/flat-batch the batch engine over the v3 blob's int8 companion
+                    blocks: one grouped device top-k launch per round,
+                    survivors reranked from partial full-precision reads
 
 Every path must return bit-identical (dists, ids) — the run *asserts*
 this (CI uses it as the parity gate) and additionally asserts that on the
 blob backend the batch path issues fewer cold ``reads_issued`` than B
-independent single-query searches (the cross-query dedup guarantee).
+independent single-query searches (the cross-query dedup guarantee), and
+that the quantized scan reads at most half the cold bytes of the plain
+blob scan.
 
 Reported per scenario: warm/cold us_per_call, cold-pass IOStats, and for
 the batch path the engine's round / dedup counters.
@@ -42,9 +47,16 @@ def compare(
     b: int = 16,
     runs: int = 2,
     backends=("fstore", "blob"),
+    quant_path: str | None = None,
 ) -> list[dict]:
     """One row per (backend, engine path); raises AssertionError on any
-    parity mismatch or on a batch dedup regression (blob)."""
+    parity mismatch or on a batch dedup regression (blob).
+
+    ``quant_path`` (a v3 blob) adds the ``quant/flat-batch`` scenario to
+    the blob backend's iteration: the quantized scan + rerank pipeline,
+    gated on bit-parity with legacy AND on cold ``bytes_read`` being at
+    most half of the plain blob flat-batch scan (the compressed-scan
+    guarantee)."""
     Q = np.asarray(queries, np.float32)
     B = len(Q)
     rows = []
@@ -59,10 +71,14 @@ def compare(
             ("flat-single", {}, single_loop),
             ("flat-batch", {}, lambda idx: idx.search(Q, k, b=b)),
         ]
+        if backend == "blob" and quant_path is not None:
+            scenarios.append(
+                ("quant/flat-batch", {"quantized": True}, lambda idx: idx.search(Q, k, b=b))
+            )
         results = {}
         perf = {}
         for name, kw, drive in scenarios:
-            idx = _fresh(path, backend, **kw)
+            idx = _fresh(quant_path if name.startswith("quant/") else path, backend, **kw)
             try:
                 io0 = idx.store.io.snapshot()
                 t0 = time.perf_counter()
@@ -86,9 +102,9 @@ def compare(
             finally:
                 idx.close()
 
-        # ---- parity gate: all three paths bit-identical ----------------
+        # ---- parity gate: every path bit-identical to legacy -----------
         ref_d, ref_i = results["legacy-single"]
-        for name in ("flat-single", "flat-batch"):
+        for name, _, _ in scenarios[1:]:
             d, i = results[name]
             np.testing.assert_array_equal(
                 i, ref_i, err_msg=f"{backend}/{name}: ids diverge from legacy"
@@ -104,12 +120,21 @@ def compare(
                 f"batch dedup regression on blob: batch issued {batch_reads} "
                 f"cold reads vs {single_reads} for {B} independent searches"
             )
+        # ---- compression gate: quant scan must halve the cold bytes ----
+        if "quant/flat-batch" in perf:
+            quant_bytes = perf["quant/flat-batch"][2].bytes_read
+            plain_bytes = perf["flat-batch"][2].bytes_read
+            assert 2 * quant_bytes <= plain_bytes, (
+                f"quantized-scan bytes regression: quant read {quant_bytes} "
+                f"cold bytes vs {plain_bytes} for the plain blob scan "
+                f"(needs >= 2x reduction)"
+            )
 
         legacy_warm = perf["legacy-single"][1]
         for name, _, _ in scenarios:
             cold_s, warm_s, cold_io, batch_stats = perf[name]
             row = {
-                "scenario": f"{backend}/{name}",
+                "scenario": name if name.startswith("quant/") else f"{backend}/{name}",
                 "us_per_call": round(warm_s / B * 1e6, 1),
                 "cold_us_per_call": round(cold_s / B * 1e6, 1),
                 "speedup_vs_legacy": round(legacy_warm / warm_s, 2) if warm_s else 0.0,
@@ -118,14 +143,70 @@ def compare(
                 "reads_issued": cold_io.reads_issued,
                 "rounds": batch_stats.rounds if batch_stats else 0,
                 "dedup_hits": batch_stats.dedup_hits if batch_stats else 0,
+                "kernel_launches": getattr(batch_stats, "kernel_launches", 0)
+                if batch_stats
+                else 0,
             }
             rows.append(row)
     return rows
 
 
+def frontier(
+    *,
+    quant_path: str,
+    blob_path: str,
+    queries: np.ndarray,
+    exact_ids: np.ndarray,
+    k: int = 100,
+    b_values=(4, 8, 16, 32),
+    runs: int = 2,
+) -> list[dict]:
+    """Recall/latency frontier over the effort knob b: for each b, the
+    quantized batch pipeline's warm us_per_call + recall@k against the
+    exact (brute-force) top-k, with the plain blob batch path alongside
+    (same b — quantized parity means recall is identical; the frontier
+    shows what the byte/latency trade buys at each effort level)."""
+    Q = np.asarray(queries, np.float32)
+    B = len(Q)
+    exact = [set(map(int, row[:k])) for row in np.asarray(exact_ids)]
+    rows = []
+    for b in b_values:
+        for name, path, kw in (
+            ("quant", quant_path, {"quantized": True}),
+            ("blob", blob_path, {}),
+        ):
+            idx = _fresh(path, "blob", **kw)
+            try:
+                io0 = idx.store.io.snapshot()
+                res = idx.search(Q, k, b=b)
+                cold_io = idx.store.io.delta(io0)
+                warm = []
+                for _ in range(runs):
+                    t0 = time.perf_counter()
+                    idx.search(Q, k, b=b)
+                    warm.append(time.perf_counter() - t0)
+                hits = sum(
+                    len(exact[r] & set(int(i) for i in res.ids[r] if i >= 0))
+                    for r in range(B)
+                )
+                rows.append(
+                    {
+                        "scenario": f"{name}/b={b}",
+                        "us_per_call": round(float(np.mean(warm)) / B * 1e6, 1),
+                        "recall": round(hits / (B * k), 4),
+                        "bytes_read": cold_io.bytes_read,
+                        "reads_issued": cold_io.reads_issued,
+                    }
+                )
+            finally:
+                idx.close()
+    return rows
+
+
 def run(*, runs: int = 2, backends=("fstore", "blob")) -> list[dict]:
     """The run.py scenario over the shared bench suite: B = all task
-    queries (B >= 16), matched k/b with the paper tables."""
+    queries (B >= 16), matched k/b with the paper tables.  Includes the
+    ``quant/flat-batch`` scenario (parity + >=2x bytes gates)."""
     from .indexes import get_suite
 
     s = get_suite()
@@ -138,9 +219,88 @@ def run(*, runs: int = 2, backends=("fstore", "blob")) -> list[dict]:
         b=s.params["b"]["eCP-FS"],
         runs=runs,
         backends=backends,
+        quant_path=s.ecp_quant_path,
     )
 
 
+def run_frontier(*, runs: int = 2) -> list[dict]:
+    """The run.py frontier section: recall@k/latency per effort b for the
+    quantized pipeline vs the plain blob batch path."""
+    from .indexes import get_suite
+
+    s = get_suite()
+    queries = np.stack([t.queries[-1] for t in s.ds.tasks])
+    k = s.params["k"]
+    exact_ids = s.bf.search(queries, k).ids
+    return frontier(
+        quant_path=s.ecp_quant_path,
+        blob_path=s.ecp_blob_path,
+        queries=queries,
+        exact_ids=exact_ids,
+        k=k,
+        runs=runs,
+    )
+
+
+def smoke(n: int = 6000, dim: int = 32, n_queries: int = 24) -> None:
+    """CI quant-smoke: build -> convert (v2 + v3 int8) -> the compare()
+    gates at bench-like scale: every engine path bit-identical to legacy,
+    batch dedup on blob, and the quantized scan reading at most half the
+    plain blob's cold bytes; plus one grouped device launch per
+    leaf-bearing traversal round.  Raises on any violation."""
+    import tempfile
+
+    from repro.core import ECPBuildConfig, build_index, convert
+    from repro.data import clustered_vectors
+
+    data, _ = clustered_vectors(0, n=n, dim=dim, n_clusters=48)
+    rng = np.random.default_rng(11)
+    queries = data[rng.integers(0, n, n_queries)] + rng.normal(
+        0, 0.01, (n_queries, dim)
+    ).astype(np.float32)
+    with tempfile.TemporaryDirectory() as td:
+        path = td + "/idx"
+        build_index(
+            data, path,
+            ECPBuildConfig(levels=2, cluster_cap=max(64, n // 256)),
+        )
+        blob = str(convert(path, td + "/idx.blob"))
+        qblob = str(convert(path, td + "/idx.qblob", quant="int8"))
+        rows = compare(
+            ecp_path=path,
+            blob_path=blob,
+            queries=queries,
+            k=100,
+            b=16,
+            runs=1,
+            backends=("blob",),
+            quant_path=qblob,
+        )
+        quant = next(r for r in rows if r["scenario"] == "quant/flat-batch")
+        assert 0 < quant["kernel_launches"] <= quant["rounds"], (
+            f"expected one grouped launch per leaf-bearing round, got "
+            f"{quant['kernel_launches']} launches over {quant['rounds']} rounds"
+        )
+        plain = next(r for r in rows if r["scenario"] == "blob/flat-batch")
+        print(
+            f"quant smoke OK: {n_queries} queries bit-identical; quant "
+            f"bytes={quant['bytes_read']} vs blob {plain['bytes_read']} "
+            f"({plain['bytes_read'] / max(1, quant['bytes_read']):.2f}x); "
+            f"launches={quant['kernel_launches']} rounds={quant['rounds']}"
+        )
+
+
 if __name__ == "__main__":
-    for row in run():
-        print(row)
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="quant parity + bytes + launch-count gates at bench-like scale",
+    )
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+    else:
+        for row in run():
+            print(row)

@@ -90,6 +90,8 @@ class SearchStats:
     rounds: int = 0                # lockstep batch rounds participated in (batch mode)
     dedup_hits: int = 0            # node demands served by a load another query in the
                                    # same round triggered (cross-query fetch dedup)
+    kernel_launches: int = 0       # grouped device top-k launches (quantized scan);
+                                   # exactly one per traversal round that scanned leaves
     io: IOStats = field(default_factory=IOStats)  # bytes/files/reads at the store;
                                    # zero per-row in batch mode (coalesced reads have
                                    # no per-row attribution; see batch_stats.io)
@@ -115,6 +117,17 @@ class NodeCache:
     node's version and a compaction bumps the epoch, so a pinned
     ``ECPSnapshot`` (which froze the old epoch/version map) and the live
     index can share this cache while never resolving each other's bytes.
+
+    Values are either a ``(embeddings, ids)`` node payload, a bare array
+    (leaf-ids side entries of the quantized scan), or any object with an
+    ``nbytes`` attribute (``QuantNode`` companion blocks).
+
+    ``pin(key, value)`` inserts an entry EXEMPT from LRU eviction, under
+    its own ``pinned_max_bytes`` budget slice (separate from
+    ``max_bytes``): ``ECPIndex(pin_internal=True)`` parks the internal
+    tree levels there so leaf churn can never evict the navigation
+    structure.  Pinned entries still honor ``invalidate`` /
+    ``invalidate_namespace`` / ``clear``, so mutations behave as before.
     """
 
     @staticmethod
@@ -124,11 +137,20 @@ class NodeCache:
             return None
         return max(0, int(v))
 
-    def __init__(self, max_nodes: int | None = None, *, max_bytes: int | None = None):
+    def __init__(
+        self,
+        max_nodes: int | None = None,
+        *,
+        max_bytes: int | None = None,
+        pinned_max_bytes: int | None = None,
+    ):
         self.max_nodes = self._norm_budget(max_nodes)
         self.max_bytes = self._norm_budget(max_bytes)
+        self.pinned_max_bytes = self._norm_budget(pinned_max_bytes)
         self._d: OrderedDict[tuple, tuple[np.ndarray, np.ndarray]] = OrderedDict()
         self._nbytes = 0
+        self._pinned: dict = {}
+        self._pinned_nbytes = 0
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
@@ -136,8 +158,10 @@ class NodeCache:
 
     @staticmethod
     def _entry_bytes(value) -> int:
-        emb, ids = value
-        return int(emb.nbytes) + int(ids.nbytes)
+        nb = getattr(value, "nbytes", None)
+        if nb is not None:
+            return int(nb)
+        return int(sum(a.nbytes for a in value))
 
     def resize(self, max_nodes=_UNSET, *, max_bytes=_UNSET) -> None:
         """Change either budget live; evicts immediately if shrinking."""
@@ -165,12 +189,16 @@ class NodeCache:
         """Membership probe that does NOT touch LRU order or hit/miss stats
         (used by prefetch heuristics to skip already-resident nodes)."""
         with self._lock:
-            return key in self._d
+            return key in self._d or key in self._pinned
 
     def invalidate(self, key) -> bool:
         """Drop one entry (a node that was rewritten on disk); returns
         whether it was resident."""
         with self._lock:
+            v = self._pinned.pop(key, None)
+            if v is not None:
+                self._pinned_nbytes -= self._entry_bytes(v)
+                return True
             v = self._d.pop(key, None)
             if v is None:
                 return False
@@ -184,10 +212,17 @@ class NodeCache:
             stale = [k for k in self._d if k[0] == ns]
             for k in stale:
                 self._nbytes -= self._entry_bytes(self._d.pop(k))
-            return len(stale)
+            pstale = [k for k in self._pinned if k[0] == ns]
+            for k in pstale:
+                self._pinned_nbytes -= self._entry_bytes(self._pinned.pop(k))
+            return len(stale) + len(pstale)
 
     def get(self, key):
         with self._lock:
+            v = self._pinned.get(key)
+            if v is not None:
+                self.hits += 1
+                return v
             v = self._d.get(key)
             if v is not None:
                 self._d.move_to_end(key)
@@ -196,10 +231,38 @@ class NodeCache:
                 self.misses += 1
             return v
 
+    def pin(self, key, value) -> bool:
+        """Insert an entry exempt from LRU eviction, accounted against the
+        dedicated ``pinned_max_bytes`` slice (None = unbounded).  Returns
+        False — after falling back to a normal ``put`` — when the slice is
+        full, so callers degrade gracefully instead of overcommitting."""
+        nb = self._entry_bytes(value)
+        with self._lock:
+            old = self._pinned.pop(key, None)
+            if old is not None:
+                self._pinned_nbytes -= self._entry_bytes(old)
+            if (
+                self.pinned_max_bytes is None
+                or self._pinned_nbytes + nb <= self.pinned_max_bytes
+            ):
+                lru = self._d.pop(key, None)
+                if lru is not None:
+                    self._nbytes -= self._entry_bytes(lru)
+                self._pinned[key] = value
+                self._pinned_nbytes += nb
+                return True
+        self.put(key, value)
+        return False
+
     def put(self, key, value) -> None:
         if self.max_nodes == 0 or self.max_bytes == 0:
             return
         with self._lock:
+            if key in self._pinned:  # pinned copy is authoritative: refresh it
+                self._pinned_nbytes -= self._entry_bytes(self._pinned[key])
+                self._pinned[key] = value
+                self._pinned_nbytes += self._entry_bytes(value)
+                return
             old = self._d.pop(key, None)
             if old is not None:
                 self._nbytes -= self._entry_bytes(old)
@@ -209,27 +272,39 @@ class NodeCache:
 
     @property
     def n_resident(self) -> int:
-        return len(self._d)
+        return len(self._d) + len(self._pinned)
+
+    @property
+    def n_pinned(self) -> int:
+        return len(self._pinned)
 
     @property
     def resident_bytes(self) -> int:
         with self._lock:
-            return self._nbytes
+            return self._nbytes + self._pinned_nbytes
+
+    @property
+    def pinned_bytes(self) -> int:
+        with self._lock:
+            return self._pinned_nbytes
 
     def namespace_stats(self) -> dict:
         """Per-namespace (resident nodes, resident bytes) breakdown."""
         with self._lock:
             out: dict = {}
-            for key, v in self._d.items():
-                ns = key[0]
-                n, b = out.get(ns, (0, 0))
-                out[ns] = (n + 1, b + self._entry_bytes(v))
+            for d in (self._pinned, self._d):
+                for key, v in d.items():
+                    ns = key[0]
+                    n, b = out.get(ns, (0, 0))
+                    out[ns] = (n + 1, b + self._entry_bytes(v))
             return out
 
     def clear(self) -> None:
         with self._lock:
             self._d.clear()
             self._nbytes = 0
+            self._pinned.clear()
+            self._pinned_nbytes = 0
 
 
 # ------------------------------------------------------------------ results

@@ -1074,7 +1074,8 @@ def compact(index) -> dict:
                                               generation=gen, next_id=info.next_id)
             page = getattr(store, "page_size", 4096)
             with tempfile.TemporaryDirectory(dir=blob_path.parent) as swap_td:
-                tmp_blob = convert(tmp_store, Path(swap_td) / BLOB_FILENAME, page_size=page)
+                tmp_blob = convert(tmp_store, Path(swap_td) / BLOB_FILENAME, page_size=page,
+                                   quant=getattr(store, "quant_format", None))
                 os.replace(tmp_blob, blob_path)
             new_info = layout.IndexInfo.from_attrs(tmp_store.read_attrs(layout.INFO))
             index._reload_store()

@@ -39,6 +39,25 @@ interpreter overhead, not file I/O):
 ``ECPIndex(engine="legacy")`` selects the original Python-object engine
 (core/legacy.py) — the parity oracle and benchmark baseline.
 
+``ECPIndex(quantized=True)`` turns on the device-resident scoring
+pipeline: leaf scans read the blob's scalar-quantized companion blocks
+(core/quant.py, blob format v3 — an fstore or v2 blob encodes on the fly)
+and every traversal round launches ONE grouped ``distance_topk`` kernel
+over all (query, leaf) scan units of the round
+(kernels/distance_topk/grouped.py).  Survivor selection keeps every row
+whose sound distance lower bound could still reach the query's rerank
+depth ``R = max(rerank_depth, emitted + k)``; survivors are re-scored
+against the full-precision rows (partial row reads where the store
+supports them) and staged exactly like a plain scan.  Because dropped
+rows provably rank strictly beyond R, emitted results are bit-identical
+to the fp32 engines whenever cumulative emissions stay within R —
+``rerank_depth=None`` (the default) guarantees this for every increment's
+subsequent ``take`` — while the store reads shrink to the compressed
+codes plus the few reranked rows.  Traversal control flow (leaf budgets,
+b-doubling, resume) tracks the VIRTUAL candidate count the fp engine
+would have seen (``QueryState.virtual_i``), so the tree walk is identical
+too.  A custom leaf ``scorer`` does not apply to quantized scans.
+
 Node data is loaded on first access and kept in a bounded LRU cache
 (paper §4.2) which may be private or shared across indexes
 (``MultiIndexSession``); prefetching up to a level runs on a reusable
@@ -63,6 +82,7 @@ from . import layout, legacy, lifecycle
 from .api import NodeCache, Query, ResultSet, SearchStats, StaleQueryError, pack_rows
 from .distances import np_distances
 from .frontier import CandidateBuffer, Frontier
+from .quant import QFORMATS, distance_bounds, encode_node, qdtype
 from .store import NodeNormCache, Store, open_store
 
 __all__ = [
@@ -81,6 +101,20 @@ PREFETCH_FANOUT = 8
 
 ENGINES = ("flat", "legacy")
 
+# per-query cap on the exact-distance watermark array the quantized scan
+# keeps for cross-leaf pruning (QueryState.best_d)
+BEST_D_CAP = 4096
+
+
+def _kernel_ops():
+    """The grouped device top-k entry point, resolved lazily so plain
+    (non-quantized) searches never import jax; late attribute lookup keeps
+    ``repro.kernels.distance_topk.ops.grouped_distance_topk`` patchable
+    (the launch-count tests count calls through here)."""
+    from repro.kernels.distance_topk import ops
+
+    return ops
+
 
 @dataclass
 class QueryState:
@@ -98,6 +132,20 @@ class QueryState:
     emitted: int = 0
     stats: SearchStats = field(default_factory=SearchStats)
     _excl_arr: np.ndarray | None = None
+    # quantized-scan bookkeeping: virtual_i mirrors the candidate count
+    # the fp32 engine's I would have (scanned live rows minus takes) so
+    # control flow stays identical even though only reranked survivors are
+    # staged; best_d is the sorted exact-distance watermark used to prune
+    # later leaves (None until the first quantized increment)
+    virtual_i: int | None = None
+    best_d: np.ndarray | None = None
+    _q_norm: float | None = None
+
+    def q_norm(self) -> float:
+        """||q|| in float64 (the ip metric's error-bound operand)."""
+        if self._q_norm is None:
+            self._q_norm = float(np.linalg.norm(np.asarray(self.q, np.float64)))
+        return self._q_norm
 
     def excl(self) -> np.ndarray | None:
         """The exclude set as a cached int64 array (np.isin operand).
@@ -109,17 +157,52 @@ class QueryState:
         return self._excl_arr
 
 
-def make_kernel_scorer(min_rows: int = 256, impl: str = "auto"):
+class _LeafRowCache:
+    """Accumulated full-precision rows of one leaf, filled lazily by the
+    quantized rerank across rounds and queries.
+
+    ``emb`` is a full-leaf-shaped buffer (rows never fetched stay zero)
+    so every rerank GEMM has exactly the shape the fp engine's scan has —
+    per-column GEMM results depend only on that column's data, which is
+    what keeps staged distances bit-identical.  ``have`` marks which rows
+    hold real data; each storage row is read from disk at most once per
+    cache residency no matter how many (query, round) units demand it.
+    Concurrent fills from snapshot readers write disjoint (or identical)
+    rows, so sharing one instance through NodeCache is safe."""
+
+    __slots__ = ("emb", "ids", "have", "born")
+
+    def __init__(self, n_rows: int, dim: int, born: int = 0):
+        self.emb = np.zeros((n_rows, dim), np.float32)
+        self.ids = np.full(n_rows, -1, np.int64)
+        self.have = np.zeros(n_rows, bool)
+        self.born = born  # search-call sequence that first demanded rows
+
+    @property
+    def nbytes(self) -> int:
+        return self.emb.nbytes + self.ids.nbytes + self.have.nbytes
+
+
+def make_kernel_scorer(min_rows: int = 256, impl: str = "auto", bucket: int = 512):
     """A leaf ``scorer`` that runs large leaf blocks through the fused
     Pallas ``distance_topk`` kernel (kernels/distance_topk) and falls back
     to numpy below ``min_rows``.
 
     Full-N selection (k == N) recovers every item's distance, scattered
     back to storage order, so the traversal's candidate semantics are
-    unchanged.  Device math is NOT guaranteed bit-identical to the numpy
-    path across backends — this is an opt-in throughput mode, excluded
-    from the parity suite.
+    unchanged.  Leaf blocks are zero-padded up to the next multiple of
+    ``bucket`` before the call, so the kernel's jit cache holds ONE
+    compiled program per size bucket instead of one per distinct leaf
+    size (k and N are static compile keys; pad rows are dropped at the
+    scatter, so results are unchanged).  ``scorer.compile_shapes`` is the
+    set of (N_pad, k) static keys issued so far — tests assert it stays
+    at one entry across heterogeneous leaves.  Device math is NOT
+    guaranteed bit-identical to the numpy path across backends — this is
+    an opt-in throughput mode, excluded from the parity suite.
     """
+    if bucket < 1:
+        raise ValueError("bucket must be >= 1")
+    compile_shapes: set = set()
 
     def scorer(q, emb, metric, sqnorms=None):
         n = emb.shape[0]
@@ -127,11 +210,23 @@ def make_kernel_scorer(min_rows: int = 256, impl: str = "auto"):
             return np_distances(q, emb, metric, c_sqnorms=sqnorms)
         from repro.kernels.distance_topk import distance_topk
 
-        d, idx = distance_topk(np.asarray(q, np.float32)[None, :], emb, n, metric, impl=impl)
-        out = np.empty(n, np.float32)
-        out[np.asarray(idx[0])] = np.asarray(d[0], np.float32)
+        n_pad = -(-n // bucket) * bucket
+        block = np.asarray(emb, np.float32)
+        if n_pad != n:
+            padded = np.zeros((n_pad, emb.shape[1]), np.float32)
+            padded[:n] = block
+            block = padded
+        compile_shapes.add((n_pad, n_pad))
+        d, idx = distance_topk(
+            np.asarray(q, np.float32)[None, :], block, n_pad, metric, impl=impl
+        )
+        d, idx = np.asarray(d[0], np.float32), np.asarray(idx[0])
+        keep = idx < n  # pad rows rank somewhere; full-N selection means
+        out = np.empty(n, np.float32)  # every REAL row is present exactly once
+        out[idx[keep]] = d[keep]
         return out
 
+    scorer.compile_shapes = compile_shapes
     return scorer
 
 
@@ -271,9 +366,21 @@ class ECPIndex:
         scorer=None,
         batch_matrix: bool = False,
         norm_cache_entries: int = 16384,
+        quantized: "bool | str" = False,
+        rerank_depth: int | None = None,
+        pin_internal: bool = False,
     ):
         if engine not in ENGINES:
             raise ValueError(f"unknown engine: {engine!r} ({'|'.join(ENGINES)})")
+        if quantized and engine == "legacy":
+            raise ValueError(
+                "quantized scans run on the round-based flat engine only; "
+                "engine='legacy' is the fp32 parity oracle"
+            )
+        if isinstance(quantized, str) and quantized not in QFORMATS:
+            raise ValueError(
+                f"unknown quant format: {quantized!r} ({'|'.join(QFORMATS)})"
+            )
         self._owns_store = not isinstance(path, Store)
         self._reopen = (
             dict(path=path, backend=backend, prefetch=prefetch,
@@ -323,6 +430,26 @@ class ECPIndex:
         self._norms = (
             NodeNormCache(norm_cache_entries) if self.info.metric == "l2" else None
         )
+        # device-resident scoring pipeline (quantized leaf scan + rerank):
+        # qformat follows the blob's persisted companion tier; a string
+        # ``quantized`` overrides it for on-the-fly encoding backends
+        self._quantized = bool(quantized)
+        self._rerank_depth = None if rerank_depth is None else max(1, int(rerank_depth))
+        # monotone per-public-call counter: a leaf whose row cache was
+        # born in an EARLIER call is under repeat demand, so later calls
+        # read it whole and scan it on the cached fp fast path
+        self._quant_seq = 0
+        self._qformat = (
+            quantized
+            if isinstance(quantized, str)
+            else (getattr(self.store, "quant_format", None) or "int8")
+        )
+        # hot-level pinning: park every internal level in the cache's
+        # pinned (LRU-exempt) region at open so leaf churn never evicts
+        # the navigation structure — warm internal_reads drop to zero
+        self._pin_internal = bool(pin_internal)
+        if self._pin_internal and self.info.levels > 1:
+            self._preload_internal()
 
     @property
     def state_store(self):
@@ -368,6 +495,40 @@ class ECPIndex:
                 break
             self.store.io.count_prefetch(wasted_bytes=nb)
 
+    def _store_miss(self, level: int, node: int, v) -> None:
+        """Account + cache one node read the store just served: internal
+        levels (1..L-1) bump ``io.internal_reads`` — the counter the
+        hot-level pinning tests watch — and go to the pinned cache region
+        when ``pin_internal`` is on."""
+        self.load_node_count += 1
+        key = self._key(level, node)
+        if 0 < level < self.info.levels:
+            self.store.io.count_internal(1)
+            if self._pin_internal:
+                self.cache.pin(key, v)
+                return
+        self.cache.put(key, v)
+
+    def _preload_internal(self) -> None:
+        """Load and pin every internal-level node (pin_internal=True):
+        after this, a warm search's ``internal_reads`` delta is zero."""
+        info = self.info
+        keys = [
+            (lv, j)
+            for lv in range(1, info.levels)
+            for j in range(info.nodes_per_level[lv - 1])
+        ]
+        chunk = 64
+        for i in range(0, len(keys), chunk):
+            batch = [
+                kk for kk in keys[i : i + chunk]
+                if not self.cache.contains(self._key(*kk))
+            ]
+            if not batch:
+                continue
+            for (lv, nd), v in zip(batch, self.store.get_nodes(batch)):
+                self._store_miss(lv, nd, v)
+
     def get_node(self, level: int, node: int) -> tuple[np.ndarray, np.ndarray]:
         key = self._key(level, node)
         v = self.cache.get(key)
@@ -378,8 +539,7 @@ class ECPIndex:
         if self._pf_pending:
             self._pf_consumed(level, node, hit=False)
         v = self.store.get_node(level, node)
-        self.load_node_count += 1
-        self.cache.put(key, v)
+        self._store_miss(level, node, v)
         return v
 
     def _on_prefetched(self, key, value) -> None:
@@ -407,10 +567,57 @@ class ECPIndex:
                 missing_i.append(i)
         if missing:
             for (lv, nd), i, v in zip(missing, missing_i, self.store.get_nodes(missing)):
-                self.load_node_count += 1
-                self.cache.put(self._key(lv, nd), v)
+                self._store_miss(lv, nd, v)
                 out[i] = v
         return out
+
+    def _get_quant_nodes(self, keys: list) -> list:
+        """Cache-aware batched read of the leaves' quantized companion
+        blocks (``QuantNode`` per key, cached under ``key + ('q',)``).
+        A store without companions (fstore, v1/v2 blob) falls back to
+        encoding the full-precision node on the fly — functionally
+        identical, no byte savings."""
+        out: list = [None] * len(keys)
+        missing, missing_i = [], []
+        for i, (lv, nd) in enumerate(keys):
+            v = self.cache.get(self._key(lv, nd) + ("q",))
+            if v is not None:
+                out[i] = v
+            else:
+                missing.append((lv, nd))
+                missing_i.append(i)
+        if missing:
+            getter = getattr(self.store, "get_nodes_quantized", None)
+            if getter is not None:
+                payloads = getter(missing, self._qformat)
+            else:
+                payloads = [
+                    encode_node(self.store.get_node(lv, nd)[0], self._qformat)
+                    for lv, nd in missing
+                ]
+            for (lv, nd), i, qn in zip(missing, missing_i, payloads):
+                self.load_node_count += 1
+                self.cache.put(self._key(lv, nd) + ("q",), qn)
+                out[i] = qn
+        return out
+
+    def _get_leaf_ids(self, level: int, node: int) -> np.ndarray:
+        """One leaf's item ids without its embeddings (tombstone/exclude
+        filtering during the quantized scan): served from a cached full
+        node when resident, else an ids-only store read cached under
+        ``key + ('ids',)``."""
+        full = self.cache.get(self._key(level, node))
+        if full is not None:
+            return full[1]
+        ikey = self._key(level, node) + ("ids",)
+        v = self.cache.get(ikey)
+        if v is not None:
+            return v
+        getter = getattr(self.store, "get_node_ids", None)
+        ids = getter(level, node) if getter is not None else self.store.get_node(level, node)[1]
+        self.cache.put(ikey, ids)
+        return ids
+
 
     def prefetch(self, up_to_level: int) -> None:
         """Background-load all nodes at levels 1..up_to_level (paper §4.2)
@@ -585,7 +792,9 @@ class ECPIndex:
             return self._scorer(q, emb, self.info.metric, sq)
         return np_distances(q, emb, self.info.metric, c_sqnorms=sq)
 
-    def _stage_leaf(self, qs: QueryState, d: np.ndarray, ids: np.ndarray) -> None:
+    def _stage_leaf(
+        self, qs: QueryState, d: np.ndarray, ids: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray]:
         tomb = self._tomb_sorted()
         if tomb is not None and len(ids):
             keep = ~np.isin(ids, tomb)
@@ -596,6 +805,37 @@ class ECPIndex:
             if not keep.all():
                 d, ids = d[keep], ids[keep]
         qs.I.stage(d, ids)
+        return d, ids
+
+    def _ilen(self, qs: QueryState) -> int:
+        """The candidate count Algorithm 2/3 decisions key off: the fp32
+        engines use ``len(I)`` directly; the quantized scan substitutes
+        the virtual count (all scanned live rows, not just the reranked
+        survivors it stages) so traversal control flow is identical."""
+        return qs.virtual_i if qs.virtual_i is not None else len(qs.I)
+
+    def _fp_leaf(self, key: tuple) -> bool:
+        """Quantized-mode routing: scan this leaf full-precision when its
+        fp node is already cached, or when its rerank row cache was born
+        in an earlier public call (repeat demand across calls — one full
+        read now converges the leaf to plain-scan speed)."""
+        if self.cache.contains(self._key(*key)):
+            return True
+        rc = self.cache.get(self._key(*key) + ("rows",))
+        return rc is not None and rc.born < self._quant_seq
+
+    @staticmethod
+    def _note_exact(qs: QueryState, d_live) -> None:
+        """Fold freshly-staged exact live distances into the query's
+        sorted cross-leaf watermark (``best_d``) used by the quantized
+        scan's rank-R pruning threshold."""
+        if not len(d_live):
+            return
+        add = np.asarray(d_live, np.float64)
+        bd = qs.best_d
+        merged = add if bd is None else np.concatenate([bd, add])
+        merged.sort()
+        qs.best_d = merged[:BEST_D_CAP]
 
     def _prefetch_hint(self, child_level: int, ids: np.ndarray, d: np.ndarray) -> list:
         """The nearest not-yet-resident children of one expansion —
@@ -645,6 +885,7 @@ class ECPIndex:
         states = [
             QueryState(q=row, b=b, mx_inc=mx_inc, exclude=set(excl)) for row in Q
         ]
+        self._quant_seq += 1
         if len(states) == 1:
             self._increment(states[0], k)
             rows = [self._next_items(states[0], k)]
@@ -653,7 +894,7 @@ class ECPIndex:
         # rows — the same two chances Algorithm 1 + 2 give a single query
         agg = SearchStats()
         self._batch_increment(states, k, agg)
-        need = [qs for qs in states if len(qs.I) < k and qs.T]
+        need = [qs for qs in states if self._ilen(qs) < k and qs.T]
         if need:
             self._batch_increment(need, k, agg)
         rows = [self._next_items(qs, k, resume=False) for qs in states]
@@ -671,8 +912,9 @@ class ECPIndex:
     def _next_rows(self, states: list, k: int, batch_stats: SearchStats | None = None) -> list:
         if self.engine == "legacy":
             return [legacy.next_items(self, qs, k) for qs in states]
+        self._quant_seq += 1
         if len(states) > 1:
-            need = [qs for qs in states if len(qs.I) < k and qs.T]
+            need = [qs for qs in states if self._ilen(qs) < k and qs.T]
             if need:
                 agg = batch_stats if batch_stats is not None else SearchStats()
                 self._batch_increment(need, k, agg)
@@ -680,10 +922,12 @@ class ECPIndex:
         return [self._next_items(qs, k) for qs in states]
 
     def _next_items(self, qs: QueryState, k: int, *, resume: bool = True):
-        if resume and len(qs.I) < k and qs.T:
+        if resume and self._ilen(qs) < k and qs.T:
             self._increment(qs, k)
         d, i = qs.I.take(k)
         qs.emitted += int(len(d))
+        if qs.virtual_i is not None:
+            qs.virtual_i = max(0, qs.virtual_i - int(len(d)))
         return d, i
 
     # ------------------------------------------------------- Algorithm 3
@@ -694,6 +938,16 @@ class ECPIndex:
         qs.T.push_batch(d, self.root_ids, 1 if self.info.levels == 1 else 0, 1)
 
     def _increment(self, qs: QueryState, k: int) -> None:
+        if self._quantized:
+            # the quantized scan lives in the round engine (it is what
+            # builds the per-round grouped kernel launch) — a single query
+            # is a batch of one, with io/launches re-attributed to the row
+            io_before = self.store.io.snapshot()
+            agg = SearchStats()
+            self._batch_increment([qs], k, agg)
+            qs.stats.kernel_launches += agg.kernel_launches
+            qs.stats.io.add(self.store.io.delta(io_before))
+            return
         info = self.info
         leaf_cnt = 0
         loads_before = self.load_node_count
@@ -760,12 +1014,16 @@ class ECPIndex:
         have no per-row attribution).
         """
         info = self.info
+        quant = self._quantized
         io_before = self.store.io.snapshot()
         for qs in states:
             qs._excl_arr = None  # re-read the (mutable) exclude set
             if not qs.started:
                 self._start(qs)
+            if quant and qs.virtual_i is None:
+                qs.virtual_i = len(qs.I)
         leaf_cnt = {id(qs): 0 for qs in states}
+        pending: list = []  # quantized (query, leaf) units awaiting rerank
         active = [qs for qs in states if qs.T]
         while active:
             agg.rounds += 1
@@ -781,10 +1039,38 @@ class ECPIndex:
             for p in pops:
                 key_rows.setdefault((p[2], p[3]), []).append(p)
             keys = list(key_rows)
+            # quantized mode scans leaves from the compressed companion
+            # blocks; only internal nodes go through the fp payload path.
+            # A leaf whose full fp node is already cached (a prior rerank
+            # fetched it), or whose row cache was born in an earlier call
+            # (repeat demand — read it whole once, scan it cheap forever),
+            # skips the kernel + rerank entirely and scans through the fp
+            # path — the results are bit-identical either way, and the
+            # warm path costs what the plain engine's does.
+            if quant:
+                leaf_keys = [
+                    key
+                    for key in keys
+                    if key_rows[key][0][1] and not self._fp_leaf(key)
+                ]
+                lset = set(leaf_keys)
+                fp_keys = [key for key in keys if key not in lset]
+            else:
+                leaf_keys, fp_keys = [], keys
             missing = {
-                key for key in keys if not self.cache.contains(self._key(*key))
+                key for key in fp_keys if not self.cache.contains(self._key(*key))
             }
-            payloads = dict(zip(keys, self.get_nodes(keys)))
+            missing |= {
+                key
+                for key in leaf_keys
+                if not self.cache.contains(self._key(*key) + ("q",))
+            }
+            payloads = dict(zip(fp_keys, self.get_nodes(fp_keys))) if fp_keys else {}
+            qpayloads = (
+                dict(zip(leaf_keys, self._get_quant_nodes(leaf_keys)))
+                if leaf_keys
+                else {}
+            )
             for key in keys:
                 demanders = key_rows[key]
                 if key in missing:
@@ -796,7 +1082,11 @@ class ECPIndex:
                             p[0].stats.dedup_hits += 1
             hints: dict[tuple, None] = {}
             done: set[int] = set()
-            for key in keys:
+            if leaf_keys:
+                self._quant_scan_round(
+                    leaf_keys, key_rows, qpayloads, k, agg, leaf_cnt, done, pending
+                )
+            for key in fp_keys:
                 emb, ids = payloads[key]
                 if len(ids) == 0:
                     continue
@@ -805,21 +1095,29 @@ class ECPIndex:
                 is_leaf = bool(demanders[0][1])
                 sq = self._sqnorms(level, node, emb)
                 D = None
-                if self._batch_matrix and len(demanders) >= 4 and not (is_leaf and self._scorer is not None):
+                if self._batch_matrix and len(demanders) >= 4 and not (is_leaf and (self._scorer is not None or quant)):
                     # opt-in dense [B', N] block (not bit-exact across B');
                     # only pays off once enough rows co-demand the node
                     D = np_distances(
                         np.stack([p[0].q for p in demanders]), emb, info.metric, c_sqnorms=sq
                     )
                 for r, (qs, _, _, _) in enumerate(demanders):
-                    d = D[r] if D is not None else self._score_row(qs.q, emb, sq, leaf=is_leaf)
+                    d = D[r] if D is not None else self._score_row(
+                        qs.q, emb, sq, leaf=is_leaf and not quant
+                    )
                     qs.stats.distance_calcs += len(ids)
                     if is_leaf:
                         qs.stats.leaves_opened += 1
-                        self._stage_leaf(qs, d, ids)
+                        d_f, _ = self._stage_leaf(qs, d, ids)
+                        if qs.virtual_i is not None:
+                            # a fully-staged leaf advances the virtual
+                            # count by its live rows, and its exact
+                            # distances tighten the cross-leaf watermark
+                            qs.virtual_i += int(len(d_f))
+                            self._note_exact(qs, d_f)
                         leaf_cnt[id(qs)] += 1
                         if leaf_cnt[id(qs)] >= qs.b:
-                            if len(qs.I) >= k:
+                            if self._ilen(qs) >= k:
                                 done.add(id(qs))
                             elif qs.mx_inc == -1 or qs.increments < qs.mx_inc:
                                 qs.increments += 1
@@ -835,9 +1133,286 @@ class ECPIndex:
             if hints:
                 self._store_prefetch(list(hints), on_node=self._on_prefetched)
             active = [qs for qs in active if id(qs) not in done and qs.T]
+        self._quant_finalize(pending)
         agg.io.add(self.store.io.delta(io_before))
         for qs in states:
             qs.I.commit()
+
+    # ------------------------------------------- quantized leaf scan round
+    def _quant_scan_round(
+        self, leaf_keys, key_rows, qpayloads, k, agg, leaf_cnt, done, pending
+    ) -> None:
+        """Scan every (query, leaf) unit of one traversal round from the
+        quantized companion blocks with ONE grouped device launch.
+
+        Only the approximate results are produced here — they go on
+        ``pending`` and are reranked once, at the end of the increment
+        (``_quant_finalize``), when every scanned leaf's upper bounds have
+        been seen and the per-query pruning watermark is as tight as it
+        will get.  Traversal control flow never looks at staged leaf
+        distances (only at the virtual candidate count and the internal
+        levels), so deferring the rerank cannot change which nodes are
+        visited."""
+        info = self.info
+        metric = info.metric
+        tomb = self._tomb_sorted()
+        units = []  # (qs, key, qn, R)
+        for key in leaf_keys:
+            qn = qpayloads[key]
+            if qn.n_rows == 0:
+                continue  # matches the fp engines: empty nodes cost nothing
+            for qs, _leaf, _lv, _nd in key_rows[key]:
+                units.append(
+                    (qs, key, qn, max(self._rerank_depth or 0, qs.emitted + k))
+                )
+        if not units:
+            return
+        # ---- the round's single grouped kernel launch
+        G = len(units)
+        n_max = max(u[2].n_rows for u in units)
+        r_max = max(u[3] for u in units)
+        kop = min(n_max, -(-(r_max + 16) // 32) * 32)
+        q_arr = np.stack([np.asarray(u[0].q, np.float32) for u in units])
+        codes = np.zeros((G, n_max, info.dim), qdtype(self._qformat))
+        scales = np.zeros(G, np.float32)
+        offsets = np.zeros(G, np.float32)
+        n_rows = np.zeros(G, np.int32)
+        for g, (qs, key, qn, R) in enumerate(units):
+            codes[g, : qn.n_rows] = qn.codes
+            scales[g] = qn.scale
+            offsets[g] = qn.offset
+            n_rows[g] = qn.n_rows
+        dists, idxs = _kernel_ops().grouped_distance_topk(
+            q_arr, codes, scales, offsets, n_rows, kop, metric, self._qformat
+        )
+        agg.kernel_launches += 1
+        # ---- record approximate results; advance per-query control flow
+        for g, (qs, key, qn, R) in enumerate(units):
+            dead_rows = None
+            n_dead = 0
+            if tomb is not None or qs.exclude:
+                ids = self._get_leaf_ids(*key)
+                dead = np.zeros(len(ids), bool)
+                if tomb is not None:
+                    dead |= np.isin(ids, tomb)
+                if qs.exclude:
+                    dead |= np.isin(ids, qs.excl())
+                dead_rows = np.flatnonzero(dead)
+                n_dead = len(dead_rows)
+            valid = idxs[g] >= 0
+            pending.append(
+                (
+                    qs,
+                    key,
+                    qn,
+                    R,
+                    dists[g][valid].astype(np.float64),
+                    idxs[g][valid].astype(np.int64),
+                    qn.n_rows > kop,
+                    dead_rows,
+                )
+            )
+            qs.stats.distance_calcs += qn.n_rows
+            qs.stats.leaves_opened += 1
+            # virtual candidate count advances by what the fp engine would
+            # have staged: every live row of the leaf, survivors or not
+            qs.virtual_i += qn.n_rows - n_dead
+            leaf_cnt[id(qs)] += 1
+            if leaf_cnt[id(qs)] >= qs.b:
+                if qs.virtual_i >= k:
+                    done.add(id(qs))
+                elif qs.mx_inc == -1 or qs.increments < qs.mx_inc:
+                    qs.increments += 1
+                    qs.stats.increments += 1
+                    qs.b *= 2
+                else:
+                    done.add(id(qs))
+
+    def _quant_finalize(self, pending) -> None:
+        """End-of-increment rerank of every pending (query, leaf) unit.
+
+        Pass 1 live-filters each unit and pools its exact-distance upper
+        bounds per query; the R-th smallest pooled value (together with
+        ``best_d``, the exact distances staged by earlier increments) is a
+        sound bound on the query's R-th best distance — at least R
+        distinct rows provably score at or below it.  Pass 2 keeps only
+        rows whose lower bound could still reach rank R under that final
+        watermark, then fetches and scores the survivors.
+
+        A fully-pruned leaf never touches its fp block — that is the
+        scan's byte saving.  Already-cached or high-coverage leaves go
+        through ONE coalescing ``get_nodes`` (which populates the node
+        cache, so later increments scan them on the cached fp fast path);
+        sparse survivor sets use partial row reads (I/O proportional to
+        R, not the leaf size) accumulated in a per-leaf _LeafRowCache —
+        each storage row is read from disk at most once no matter how
+        many queries or increments demand it.  The row cache keeps the
+        full leaf shape so every scoring GEMM below has exactly the shape
+        the fp engine's has, and a GEMM's per-column results depend only
+        on that column's data — so staged distances stay bit-identical (a
+        subset-shaped GEMM would drift in the last ulp)."""
+        if not pending:
+            return
+        info = self.info
+        metric = info.metric
+        # ---- pass 1: live-filter, bounds, per-query upper-bound pool
+        prep = []
+        pools: dict[int, list] = {}
+        rank: dict[int, int] = {}
+        for qs, key, qn, R, d_sorted, i_sorted, truncated, dead_rows in pending:
+            if dead_rows is not None and len(dead_rows) and len(i_sorted):
+                live = ~np.isin(i_sorted, dead_rows)
+                d_live, i_live = d_sorted[live], i_sorted[live]
+            else:
+                d_live, i_live = d_sorted, i_sorted
+            q_norm = qs.q_norm() if metric == "ip" else 0.0
+            if len(d_live):
+                lb, ub = distance_bounds(d_live, qn.radius, metric, q_norm)
+                pools.setdefault(id(qs), []).append(ub)
+            else:
+                lb = ub = None
+            rank[id(qs)] = max(rank.get(id(qs), 0), R)
+            prep.append(
+                (qs, key, qn, R, d_sorted, d_live, i_live, lb, ub, truncated, dead_rows)
+            )
+        tau_state: dict[int, float] = {}
+        for qs, key, qn, R, *_ in prep:
+            qid = id(qs)
+            if qid in tau_state:
+                continue
+            vals = pools.get(qid, [])
+            if qs.best_d is not None:
+                vals = vals + [qs.best_d]
+            R = rank[qid]
+            if vals:
+                u = np.concatenate(vals)
+                u.sort()
+                tau_state[qid] = float(u[R - 1]) if len(u) >= R else np.inf
+            else:
+                tau_state[qid] = np.inf
+        # ---- pass 2: survivors per unit under the final watermark
+        need_rows: dict[tuple, list] = {}
+        selections = []  # (qs, key, qn, rows)
+        for qs, key, qn, R, d_sorted, d_live, i_live, lb, ub, truncated, dead_rows in prep:
+            q_norm = qs.q_norm() if metric == "ip" else 0.0
+            rows, overflow = self._quant_survivors(
+                d_live, i_live, lb, ub, d_sorted, truncated,
+                qn.radius, R, tau_state[id(qs)], q_norm, metric,
+            )
+            if overflow:
+                # rescore the whole leaf from the local codes on the host
+                d_all = np_distances(qs.q, qn.decode(), metric).astype(np.float64)
+                order = np.argsort(d_all, kind="stable").astype(np.int64)
+                if dead_rows is not None and len(dead_rows):
+                    live = ~np.isin(order, dead_rows)
+                    d_l, i_l = d_all[order][live], order[live]
+                else:
+                    d_l, i_l = d_all[order], order
+                lb2 = ub2 = None
+                if len(d_l):
+                    lb2, ub2 = distance_bounds(d_l, qn.radius, metric, q_norm)
+                rows, _ = self._quant_survivors(
+                    d_l, i_l, lb2, ub2, d_all, False,
+                    qn.radius, R, tau_state[id(qs)], q_norm, metric,
+                )
+            selections.append((qs, key, qn, rows))
+            if len(rows):
+                need_rows.setdefault(key, []).append(rows)
+        # ---- survivor fetch: one coalescing full read + row-cache top-ups
+        partial_getter = getattr(self.store, "get_node_rows", None)
+        unions: dict[tuple, np.ndarray] = {}
+        full_keys: list = []
+        plans: dict[tuple, tuple] = {}  # key -> (rkey, row_cache, missing)
+        n_of = {key: qn.n_rows for _, key, qn, _ in selections}
+        for key, row_lists in need_rows.items():
+            union = (
+                row_lists[0]
+                if len(row_lists) == 1
+                else np.unique(np.concatenate(row_lists))
+            )
+            unions[key] = union
+            if partial_getter is None or self.cache.contains(self._key(*key)):
+                full_keys.append(key)
+                continue
+            rkey = self._key(*key) + ("rows",)
+            rc = self.cache.get(rkey)
+            missing = union if rc is None else union[~rc.have[union]]
+            # with contiguous-only run merging a partial fetch never reads
+            # a byte it doesn't need, so a full-node read only wins (on
+            # syscalls) when literally every row is demanded
+            if rc is None and len(missing) >= n_of[key]:
+                full_keys.append(key)
+            else:
+                plans[key] = (rkey, rc, missing)
+        full_payloads = (
+            dict(zip(full_keys, self.get_nodes(full_keys))) if full_keys else {}
+        )
+        fetched: dict[tuple, tuple] = {}
+        for key, union in unions.items():
+            if key in full_payloads:
+                emb, ids = full_payloads[key]
+                fetched[key] = (emb, self._sqnorms(*key, emb), ids)
+            else:
+                rkey, rc, need = plans[key]
+                if rc is None:
+                    rc = _LeafRowCache(n_of[key], info.dim, self._quant_seq)
+                if len(need):
+                    emb_rows, ids_rows = partial_getter(*key, need)
+                    rc.emb[need] = emb_rows
+                    rc.ids[need] = ids_rows
+                    rc.have[need] = True
+                    if rc.have.all():
+                        # the accumulated rows ARE the node (same f32 cast
+                        # as get_node) — promote to the node cache so the
+                        # leaf scans on the fp fast path from now on
+                        self.cache.put(self._key(*key), (rc.emb, rc.ids))
+                    else:
+                        self.cache.put(rkey, rc)
+                fetched[key] = (rc.emb, None, rc.ids)
+        # ---- exact scoring + staging, per unit
+        for qs, key, qn, rows in selections:
+            if not len(rows):
+                continue
+            emb, sq, ids = fetched[key]
+            d_full = np_distances(qs.q, emb, metric, c_sqnorms=sq)
+            d_live, _ = self._stage_leaf(qs, d_full[rows], ids[rows])
+            self._note_exact(qs, d_live)
+
+    @staticmethod
+    def _quant_survivors(
+        d_live, i_live, lb, ub, d_sorted, truncated, radius, R, tau_state,
+        q_norm, metric,
+    ) -> tuple[np.ndarray, bool]:
+        """Rows of one scanned leaf that must be reranked: every live row
+        whose exact-distance lower bound could still reach rank ``R``.
+
+        ``d_live``/``i_live``/``lb``/``ub`` are the unit's live
+        approximate distances (ascending), storage rows, and exact-
+        distance bounds; ``d_sorted`` is the unfiltered approx list (its
+        tail bounds the unseen rows); ``tau_state`` is the query's pooled
+        cross-leaf watermark.  Returns (survivor rows ascending,
+        overflow): overflow means pruning the unseen tail past a
+        truncated kernel list could not be proven sound and the caller
+        must rescore the whole leaf from the local codes (no extra
+        I/O)."""
+        if len(d_live) == 0:
+            return i_live, bool(truncated)
+        Rp = min(R, len(d_live))
+        # ub is ascending (monotone in the approx distance), so the Rp-th
+        # smallest live upper bound closes the leaf-local threshold; the
+        # cross-leaf watermark can only tighten it
+        tau = min(float(ub[Rp - 1]), tau_state)
+        # slack absorbs device-vs-host float drift in approx distances
+        # (f32 kernel vs f64 host bounds: relative error ~1e-6)
+        tau_eff = tau + 1e-4 * abs(tau) + 1e-7
+        rows = np.sort(i_live[lb <= tau_eff])
+        if truncated:
+            # unseen rows all score >= the largest seen approx distance;
+            # prunable only if even that lower bound clears tau
+            lb_tail = distance_bounds(d_sorted[-1:], radius, metric, q_norm)[0][0]
+            if len(d_live) < R or lb_tail <= tau_eff:
+                return rows, True
+        return rows, False
 
     # -------------------------------------------------------- persistence
     def _export_state(self, qs) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
@@ -929,6 +1504,13 @@ class ECPSnapshot(ECPIndex):
         self._scorer = parent._scorer
         self._batch_matrix = parent._batch_matrix
         self._norms = parent._norms
+        self._quantized = parent._quantized
+        self._rerank_depth = parent._rerank_depth
+        self._qformat = parent._qformat
+        self._quant_seq = parent._quant_seq
+        # never pin from a snapshot: its versioned keys outlive the pin's
+        # usefulness once the snapshot closes (parent's pins stay shared)
+        self._pin_internal = False
         self._refs = 1
         self._refs_lock = threading.Lock()
 

@@ -61,6 +61,19 @@ Two header formats share the magic; the JSON ``format`` field versions them:
             always fits.  A v1 file is upgraded to v2 in place the first
             time a structural mutation needs the slot map (if its reserved
             header page can hold the map — otherwise rebuild).
+  ``ecp-blob/3``  v2 plus a quantized companion block per slot
+            (``convert(..., quant="int8"|"float16")``): the header adds
+            ``quant = {"qformat", "q_block_bytes"}`` and every slot's
+            stride becomes ``block_bytes + q_block_bytes`` — the
+            full-precision block, then ``[scale f32][offset f32][codes
+            n_rows*dim]``.  ``get_quantized``/``get_nodes_quantized``
+            read only the (much smaller) companion; ``get_node_rows``
+            reads a subset of full-precision rows for the rerank;
+            ``write_node`` re-encodes the companion on every update so
+            insert/delete/split/compact keep the two views coherent.
+            Stores without a companion (v1/v2 blobs, fstore) serve
+            ``get_quantized`` by encoding on the fly from the
+            full-precision rows — same codes, no byte savings.
 
 Snapshot isolation (the serving subsystem's read side): ``BlobStore.pin()``
 returns a ``BlobSnapshot`` — a read-only view pinned to the header version
@@ -84,6 +97,7 @@ import numpy as np
 
 from . import layout
 from .fstore import FStore, dtype_to_zarr, zarr_to_dtype
+from .quant import QFORMATS, QuantNode, encode_node, qdtype
 
 __all__ = [
     "IOStats",
@@ -123,6 +137,7 @@ class IOStats:
         "prefetch_issued",
         "prefetch_hits",
         "prefetch_wasted_bytes",
+        "internal_reads",
         "_lock",
     )
 
@@ -134,6 +149,7 @@ class IOStats:
         prefetch_issued: int = 0,
         prefetch_hits: int = 0,
         prefetch_wasted_bytes: int = 0,
+        internal_reads: int = 0,
     ):
         self.bytes_read = bytes_read
         self.files_opened = files_opened
@@ -141,6 +157,7 @@ class IOStats:
         self.prefetch_issued = prefetch_issued
         self.prefetch_hits = prefetch_hits
         self.prefetch_wasted_bytes = prefetch_wasted_bytes
+        self.internal_reads = internal_reads
         self._lock = threading.Lock()
 
     def count(self, nbytes: int, *, files: int = 0, reads: int = 1) -> None:
@@ -148,6 +165,14 @@ class IOStats:
             self.bytes_read += int(nbytes)
             self.files_opened += files
             self.reads_issued += reads
+
+    def count_internal(self, reads: int = 1) -> None:
+        """Internal-level (non-leaf) node loads that missed the cache —
+        incremented by the traversal, not the raw read path, because only
+        the engine knows a key's level.  Hot-level pinning drives this to
+        ~0 on warm queries; the counter is the proof."""
+        with self._lock:
+            self.internal_reads += reads
 
     def count_prefetch(self, *, issued: int = 0, hits: int = 0, wasted_bytes: int = 0) -> None:
         with self._lock:
@@ -164,6 +189,7 @@ class IOStats:
                 self.prefetch_issued,
                 self.prefetch_hits,
                 self.prefetch_wasted_bytes,
+                self.internal_reads,
             )
 
     def delta(self, since: "IOStats") -> "IOStats":
@@ -175,6 +201,7 @@ class IOStats:
                 self.prefetch_issued - since.prefetch_issued,
                 self.prefetch_hits - since.prefetch_hits,
                 self.prefetch_wasted_bytes - since.prefetch_wasted_bytes,
+                self.internal_reads - since.internal_reads,
             )
 
     def add(self, other: "IOStats") -> None:
@@ -185,6 +212,7 @@ class IOStats:
             self.prefetch_issued += other.prefetch_issued
             self.prefetch_hits += other.prefetch_hits
             self.prefetch_wasted_bytes += other.prefetch_wasted_bytes
+            self.internal_reads += other.internal_reads
 
     def as_dict(self) -> dict:
         with self._lock:
@@ -195,6 +223,7 @@ class IOStats:
                 "prefetch_issued": self.prefetch_issued,
                 "prefetch_hits": self.prefetch_hits,
                 "prefetch_wasted_bytes": self.prefetch_wasted_bytes,
+                "internal_reads": self.internal_reads,
             }
 
     def __repr__(self) -> str:
@@ -210,7 +239,15 @@ class IOStats:
 # ------------------------------------------------------------------ protocol
 @runtime_checkable
 class Store(Protocol):
-    """Node storage for an eCP index; level 0 node 0 is the root."""
+    """Node storage for an eCP index; level 0 node 0 is the root.
+
+    Optional extensions (not required for isinstance checks, probed with
+    ``getattr``): ``get_quantized(level, node, qformat)`` /
+    ``get_nodes_quantized(keys, qformat)`` returning ``QuantNode``s,
+    ``get_node_ids(level, node)`` (ids only), and
+    ``get_node_rows(level, node, rows)`` (a sorted subset of fp rows) —
+    the quantized-scan/rerank seam.  Backends without them still serve
+    the quantized engine via the engine's encode-on-the-fly fallback."""
 
     backend: str
     io: IOStats
@@ -321,6 +358,29 @@ class FStoreBackend:
                 out.append(int(self.fstore.array_meta(ids_path)["shape"][0]))
         return out
 
+    # ---------------------------------------------- quantized-read fallback
+    # the file structure has no quantized companion — codes are derived on
+    # the fly from the full-precision rows (bit-identical to what a v3
+    # blob persists, since both encode from the storage-dtype-rounded
+    # rows), so the quantized engine path works unchanged, just without
+    # the byte savings
+    quant_format = None
+
+    def get_quantized(self, level: int, node: int, qformat: str = "int8") -> QuantNode:
+        emb, _ = self.get_node(level, node)
+        return encode_node(emb, qformat)
+
+    def get_nodes_quantized(self, keys: list, qformat: str = "int8") -> list:
+        return [encode_node(emb, qformat) for emb, _ in self.get_nodes(keys)]
+
+    def get_node_ids(self, level: int, node: int) -> np.ndarray:
+        return self.get_node(level, node)[1]
+
+    def get_node_rows(self, level: int, node: int, rows) -> tuple[np.ndarray, np.ndarray]:
+        emb, ids = self.get_node(level, node)
+        rows = np.asarray(rows, np.int64)
+        return emb[rows], ids[rows]
+
     def read_attrs(self, path: str) -> dict:
         return self.fstore.read_attrs(path)
 
@@ -426,13 +486,20 @@ class BlobStore:
         self.io.count(16 + int(hlen), files=1, reads=2)
         self._header = json.loads(raw.decode("utf-8"))
         h = self._header
-        self.format = 2 if str(h.get("format", "ecp-blob/1")).endswith("/2") else 1
+        fmt = str(h.get("format", "ecp-blob/1"))
+        self.format = 3 if fmt.endswith("/3") else 2 if fmt.endswith("/2") else 1
         self.page_size = int(h["page_size"])
         self.block_bytes = int(h["block_bytes"])
         self.data_offset = int(h["data_offset"])
         self.dim = int(h["dim"])
         self.emb_dtype = zarr_to_dtype(h["emb_dtype"])
         self.ids_dtype = zarr_to_dtype(h["ids_dtype"])
+        # v3: quantized companion block after each slot's fp block
+        q = h.get("quant") or None
+        self.quant_format: str | None = str(q["qformat"]) if q else None
+        self.q_block_bytes = int(q["q_block_bytes"]) if q else 0
+        self._q_dtype = qdtype(self.quant_format) if q else None
+        self._stride = self.block_bytes + self.q_block_bytes
         # levels[lv] = list of per-node row counts; levels[0] = [root rows]
         self._n_rows: list[list[int]] = [list(map(int, lv)) for lv in h["levels"]]
         if self.format >= 2:
@@ -483,7 +550,7 @@ class BlobStore:
         return self._slots[level][node]
 
     def _offset(self, slot: int) -> int:
-        return self.data_offset + slot * self.block_bytes
+        return self.data_offset + slot * self._stride
 
     def _parse_block(self, buf: bytes, n_rows: int) -> tuple[np.ndarray, np.ndarray]:
         eb = n_rows * self.dim * self.emb_dtype.itemsize
@@ -510,8 +577,15 @@ class BlobStore:
 
     def _read_batch(self, fd: int, entries: list, out: list, io: IOStats) -> None:
         """``entries``: (slot, n_rows, out_index) triples; runs of adjacent
-        slots coalesce into one pread."""
+        slots coalesce into one pread.  On a v3 blob adjacent fp blocks
+        are separated by the quantized companions, so coalescing would
+        read (and count) bytes the caller never asked for — each entry
+        reads on its own there."""
         entries.sort()
+        if self.q_block_bytes:
+            for slot, n_rows, i in entries:
+                out[i] = self._read_one(fd, slot, n_rows, io)
+            return
         j = 0
         while j < len(entries):
             # grow a run of consecutive slots
@@ -528,6 +602,76 @@ class BlobStore:
                 rel = (slot - first_slot) * self.block_bytes
                 out[i] = self._parse_block(buf[rel : rel + n_rows * self._row_bytes], n_rows)
             j = r + 1
+
+    def _read_quant_one(self, fd: int, slot: int, n_rows: int, io: IOStats) -> QuantNode:
+        """Read one slot's quantized companion: [scale f32][offset f32]
+        [codes n_rows*dim] right after the fp block."""
+        need = 8 + n_rows * self.dim * self._q_dtype.itemsize
+        buf = os.pread(fd, need, self._offset(slot) + self.block_bytes)
+        io.count(need, reads=1)
+        scale, offset = np.frombuffer(buf, "<f4", count=2)
+        codes = (
+            np.frombuffer(buf, self._q_dtype, count=n_rows * self.dim, offset=8)
+            .reshape(n_rows, self.dim)
+            .copy()
+        )
+        return QuantNode(codes, float(scale), float(offset), self.quant_format)
+
+    def _read_ids_one(self, fd: int, slot: int, n_rows: int, io: IOStats) -> np.ndarray:
+        """Read only a block's ids segment (tombstone/exclude filtering of
+        a quantized scan — the emb rows stay untouched on disk)."""
+        eb = n_rows * self.dim * self.emb_dtype.itemsize
+        need = n_rows * self.ids_dtype.itemsize
+        buf = os.pread(fd, need, self._offset(slot) + eb)
+        io.count(need, reads=1)
+        return np.frombuffer(buf, self.ids_dtype, count=n_rows).copy()
+
+    # runs of requested rows whose index difference is <= this merge into
+    # one pread.  A difference of 1 is *adjacent* (merging is free), so 1
+    # is the bytes-optimal floor for both spans: rerank reads sit on the
+    # cold path where bytes_read is the contended budget, so neither span
+    # trades bytes for syscalls
+    _ROW_READ_GAP = 1
+    _IDS_READ_GAP = 1
+
+    def _read_rows_one(
+        self, fd: int, slot: int, n_rows: int, rows: np.ndarray, io: IOStats
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Read a sorted subset of one block's rows: coalesced range
+        preads over the emb rows and over the ids rows independently (the
+        full-precision rerank's partial fetch)."""
+        esz = self.dim * self.emb_dtype.itemsize
+        base = self._offset(slot)
+        emb = np.empty((len(rows), self.dim), self.emb_dtype)
+        j = 0
+        while j < len(rows):
+            r = j
+            while r + 1 < len(rows) and rows[r + 1] - rows[r] <= self._ROW_READ_GAP:
+                r += 1
+            a, b = int(rows[j]), int(rows[r])
+            need = (b - a + 1) * esz
+            buf = os.pread(fd, need, base + a * esz)
+            io.count(need, reads=1)
+            span = np.frombuffer(buf, self.emb_dtype, count=(b - a + 1) * self.dim)
+            span = span.reshape(b - a + 1, self.dim)
+            emb[j : r + 1] = span[rows[j : r + 1] - a]
+            j = r + 1
+        isz = self.ids_dtype.itemsize
+        ibase = base + n_rows * esz
+        ids = np.empty(len(rows), self.ids_dtype)
+        j = 0
+        while j < len(rows):
+            r = j
+            while r + 1 < len(rows) and rows[r + 1] - rows[r] <= self._IDS_READ_GAP:
+                r += 1
+            a, b = int(rows[j]), int(rows[r])
+            need = (b - a + 1) * isz
+            buf = os.pread(fd, need, ibase + a * isz)
+            io.count(need, reads=1)
+            span = np.frombuffer(buf, self.ids_dtype, count=b - a + 1)
+            ids[j : r + 1] = span[rows[j : r + 1] - a]
+            j = r + 1
+        return emb.astype(np.float32), ids
 
     # -------------------------------------------------------------- protocol
     def get_node(self, level: int, node: int) -> tuple[np.ndarray, np.ndarray]:
@@ -553,6 +697,50 @@ class BlobStore:
     def node_rows(self, keys: list) -> list[int]:
         """Row counts straight from the in-memory header (no I/O)."""
         return [self._n_rows[lv][nd] for lv, nd in keys]
+
+    # ------------------------------------------------------ quantized reads
+    def _empty_quant(self, qformat: str) -> QuantNode:
+        return QuantNode(np.zeros((0, self.dim), qdtype(qformat)), 0.0, 0.0, qformat)
+
+    def get_quantized(self, level: int, node: int, qformat: str = "int8") -> QuantNode:
+        """One node's quantized rows.  A v3 blob reads the persisted
+        companion block (``qformat`` is ignored — the blob has one); a
+        v1/v2 blob encodes on the fly from the fp rows (same codes, no
+        byte savings)."""
+        self._check_key(level, node)
+        n_rows = self._n_rows[level][node]
+        if self.quant_format is None:
+            if n_rows == 0:
+                return self._empty_quant(qformat)
+            emb, _ = self.get_node(level, node)
+            return encode_node(emb, qformat)
+        if n_rows == 0:
+            return self._empty_quant(self.quant_format)
+        return self._read_quant_one(self._fd, self._slots[level][node], n_rows, self.io)
+
+    def get_nodes_quantized(self, keys: list, qformat: str = "int8") -> list:
+        return [self.get_quantized(lv, nd, qformat) for lv, nd in keys]
+
+    def get_node_ids(self, level: int, node: int) -> np.ndarray:
+        """Only a node's ids (the quantized scan needs them just for
+        tombstone/exclude filtering)."""
+        self._check_key(level, node)
+        n_rows = self._n_rows[level][node]
+        if n_rows == 0:
+            return np.zeros((0,), self.ids_dtype)
+        return self._read_ids_one(self._fd, self._slots[level][node], n_rows, self.io)
+
+    def get_node_rows(self, level: int, node: int, rows) -> tuple[np.ndarray, np.ndarray]:
+        """Read a subset of one node's full-precision rows (sorted row
+        indices) — the rerank's partial fetch."""
+        self._check_key(level, node)
+        rows = np.asarray(rows, np.int64)
+        n_rows = self._n_rows[level][node]
+        if len(rows) == 0:
+            return self._empty()
+        if rows[0] < 0 or rows[-1] >= n_rows:
+            raise IndexError(f"rows out of range for lvl {level} node {node}")
+        return self._read_rows_one(self._fd, self._slots[level][node], n_rows, rows, self.io)
 
     def read_attrs(self, path: str) -> dict:
         if path == layout.INFO:
@@ -594,7 +782,23 @@ class BlobStore:
                 "node first or rebuild the blob with convert()"
             )
         block = emb.tobytes() + ids.tobytes()
-        return emb, ids, block + b"\0" * (self.block_bytes - len(block))
+        block += b"\0" * (self.block_bytes - len(block))
+        if self.quant_format is not None:
+            # re-encode the companion from the storage-dtype-rounded rows
+            # so codes match what a reader would encode from get_node
+            qn = encode_node(np.asarray(emb, np.float32), self.quant_format)
+            qraw = (
+                np.float32(qn.scale).tobytes()
+                + np.float32(qn.offset).tobytes()
+                + qn.codes.tobytes()
+            )
+            if len(qraw) > self.q_block_bytes:
+                raise ValueError(
+                    f"quantized node data ({len(qraw)} B) exceeds the quant "
+                    f"block size ({self.q_block_bytes} B); rebuild with convert()"
+                )
+            block += qraw + b"\0" * (self.q_block_bytes - len(qraw))
+        return emb, ids, block
 
     def write_node(self, level: int, node: int, emb: np.ndarray, ids: np.ndarray) -> None:
         """In-place node update; ``node == len(level)`` appends a new node
@@ -648,7 +852,9 @@ class BlobStore:
         structural mutators build their candidates through this one place
         so the header schema cannot diverge between them."""
         header = dict(self._header)
-        header["format"] = "ecp-blob/2"
+        # the mutable form: /3 when this blob carries quantized companions
+        # (the "quant" section rides along in the header copy), else /2
+        header["format"] = "ecp-blob/3" if self.quant_format else "ecp-blob/2"
         header["levels"] = rows
         header["slots"] = slots
         header["free_slots"] = free
@@ -658,7 +864,7 @@ class BlobStore:
 
     def _install_v2_locked(self, raw: bytes, header: dict) -> None:
         """Adopt a candidate header (in memory + on disk)."""
-        self.format = 2
+        self.format = max(2, self.format)
         self._header = header
         self._n_rows = header["levels"]
         self._slots = header["slots"]
@@ -833,7 +1039,7 @@ class BlobStore:
     def _serialize_header_locked(self) -> bytes:
         self._header["levels"] = self._n_rows
         if self.format >= 2:
-            self._header["format"] = "ecp-blob/2"
+            self._header["format"] = "ecp-blob/3" if self.quant_format else "ecp-blob/2"
             self._header["slots"] = self._slots
             self._header["free_slots"] = self._free
             self._header["n_slots"] = self._n_slots
@@ -920,6 +1126,45 @@ class BlobSnapshot:
     def node_rows(self, keys: list) -> list[int]:
         return [self._n_rows[lv][nd] for lv, nd in keys]
 
+    @property
+    def quant_format(self):
+        return self._parent.quant_format
+
+    def get_quantized(self, level: int, node: int, qformat: str = "int8") -> QuantNode:
+        self._check_key(level, node)
+        p = self._parent
+        n_rows = self._n_rows[level][node]
+        if p.quant_format is None:
+            if n_rows == 0:
+                return p._empty_quant(qformat)
+            emb, _ = self.get_node(level, node)
+            return encode_node(emb, qformat)
+        if n_rows == 0:
+            return p._empty_quant(p.quant_format)
+        return p._read_quant_one(self._fd, self._slots[level][node], n_rows, self.io)
+
+    def get_nodes_quantized(self, keys: list, qformat: str = "int8") -> list:
+        return [self.get_quantized(lv, nd, qformat) for lv, nd in keys]
+
+    def get_node_ids(self, level: int, node: int) -> np.ndarray:
+        self._check_key(level, node)
+        p = self._parent
+        n_rows = self._n_rows[level][node]
+        if n_rows == 0:
+            return np.zeros((0,), p.ids_dtype)
+        return p._read_ids_one(self._fd, self._slots[level][node], n_rows, self.io)
+
+    def get_node_rows(self, level: int, node: int, rows) -> tuple[np.ndarray, np.ndarray]:
+        self._check_key(level, node)
+        p = self._parent
+        rows = np.asarray(rows, np.int64)
+        n_rows = self._n_rows[level][node]
+        if len(rows) == 0:
+            return p._empty()
+        if rows[0] < 0 or rows[-1] >= n_rows:
+            raise IndexError(f"rows out of range for lvl {level} node {node}")
+        return p._read_rows_one(self._fd, self._slots[level][node], n_rows, rows, self.io)
+
     def read_attrs(self, path: str) -> dict:
         if path == layout.INFO:
             return dict(self._info)
@@ -963,6 +1208,7 @@ def convert(
     *,
     page_size: int = 4096,
     format: int = 2,
+    quant: str | None = None,
 ) -> Path:
     """Serialize any ``Store``'s index into a page-aligned blob file.
 
@@ -974,9 +1220,19 @@ def convert(
     list) and sizes blocks so a full ``cluster_cap`` leaf fits — the form
     ``ECPIndex.insert``/``delete``/``compact`` require.  ``format=1``
     writes the legacy fixed-layout header.
+
+    ``quant="int8"|"float16"`` additionally writes a quantized companion
+    block per slot (blob format v3, mutable): the compressed-scan input
+    of the device-resident scoring pipeline.  Converting an existing v2
+    blob with ``quant=`` set is the v2->v3 upgrade path.
     """
     if format not in (1, 2):
         raise ValueError(f"unknown blob format: {format!r} (1|2)")
+    if quant is not None:
+        if quant not in QFORMATS:
+            raise ValueError(f"unknown quant format: {quant!r} {QFORMATS}")
+        if format == 1:
+            raise ValueError("quantized companions need the mutable format (format=2)")
     store = src if isinstance(src, Store) else open_store(src)
     info = store.read_attrs(layout.INFO)
     if not info:
@@ -1017,9 +1273,15 @@ def convert(
         n_rows[lv].append(int(n))
         max_block = max(max_block, int(n) * row_bytes)
     block_bytes = _align(max_block, page_size)
+    q_block_bytes = 0
+    if quant is not None:
+        # the companion must hold any node the fp block can: size it for
+        # capacity_rows so in-place updates never outgrow it
+        q_row = dim * qdtype(quant).itemsize
+        q_block_bytes = _align(8 + (block_bytes // row_bytes) * q_row, page_size)
 
     header = {
-        "format": f"ecp-blob/{format}",
+        "format": "ecp-blob/3" if quant else f"ecp-blob/{format}",
         "page_size": page_size,
         "block_bytes": block_bytes,
         "dim": dim,
@@ -1028,6 +1290,8 @@ def convert(
         "info": dict(info),
         "levels": n_rows,
     }
+    if quant is not None:
+        header["quant"] = {"qformat": quant, "q_block_bytes": q_block_bytes}
     if format >= 2:
         at = 0
         slots = []
@@ -1060,12 +1324,21 @@ def convert(
         f.write(b" " * (data_offset - 16 - len(raw)))
         for lo in range(0, len(keys), batch):
             for emb, ids in store.get_nodes(keys[lo : lo + batch]):
-                b = (
-                    np.ascontiguousarray(emb, dtype=emb_dt).tobytes()
-                    + np.ascontiguousarray(ids, dtype=ids_dt).tobytes()
-                )
+                emb = np.ascontiguousarray(emb, dtype=emb_dt)
+                b = emb.tobytes() + np.ascontiguousarray(ids, dtype=ids_dt).tobytes()
                 f.write(b)
                 f.write(b"\0" * (block_bytes - len(b)))
+                if quant is not None:
+                    # encode from the storage-dtype-rounded rows: a reader
+                    # quantizing get_node's output lands on the same codes
+                    qn = encode_node(np.asarray(emb, np.float32), quant)
+                    qb = (
+                        np.float32(qn.scale).tobytes()
+                        + np.float32(qn.offset).tobytes()
+                        + qn.codes.tobytes()
+                    )
+                    f.write(qb)
+                    f.write(b"\0" * (q_block_bytes - len(qb)))
     os.replace(tmp, dst)
     return dst
 

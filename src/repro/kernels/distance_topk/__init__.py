@@ -1,5 +1,13 @@
-from .ops import distance_topk
-from .ref import distance_topk_ref
+from .ops import distance_topk, grouped_distance_topk
+from .ref import distance_topk_ref, grouped_distance_topk_ref
 from .distance_topk import distance_topk_pallas
+from .grouped import grouped_distance_topk_pallas
 
-__all__ = ["distance_topk", "distance_topk_ref", "distance_topk_pallas"]
+__all__ = [
+    "distance_topk",
+    "distance_topk_ref",
+    "distance_topk_pallas",
+    "grouped_distance_topk",
+    "grouped_distance_topk_ref",
+    "grouped_distance_topk_pallas",
+]

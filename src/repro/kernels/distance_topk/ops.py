@@ -9,7 +9,8 @@ from __future__ import annotations
 import jax
 
 from .distance_topk import distance_topk_pallas
-from .ref import distance_topk_ref
+from .grouped import grouped_distance_topk_pallas
+from .ref import distance_topk_ref, grouped_distance_topk_ref
 
 
 def distance_topk(q, c, k: int, metric: str = "l2", *, impl: str = "auto", **kw):
@@ -27,3 +28,44 @@ def distance_topk(q, c, k: int, metric: str = "l2", *, impl: str = "auto", **kw)
     if impl == "pallas_interpret":
         return distance_topk_pallas(q, c, k, metric, interpret=True, **kw)
     raise ValueError(f"unknown impl {impl!r}")
+
+
+def grouped_distance_topk(
+    q,
+    codes,
+    scales,
+    offsets,
+    n_rows,
+    k: int,
+    metric: str = "l2",
+    qformat: str = "int8",
+    *,
+    impl: str = "auto",
+    **kw,
+):
+    """One device launch for a whole traversal round: group g scores
+    q[g] against its leaf's quantized codes[g].  Returns numpy
+    (dists [G, k], idx [G, k]); invalid tail entries are (inf, -1).
+
+    impl: "auto" | "ref" | "pallas" | "pallas_interpret"
+    """
+    import numpy as np
+
+    if impl == "auto":
+        platform = jax.devices()[0].platform
+        impl = "pallas" if platform == "tpu" else "ref"
+    if impl == "ref":
+        d, i = grouped_distance_topk_ref(
+            q, codes, scales, offsets, n_rows, k, metric, qformat
+        )
+    elif impl == "pallas":
+        d, i = grouped_distance_topk_pallas(
+            q, codes, scales, offsets, n_rows, k, metric, qformat, **kw
+        )
+    elif impl == "pallas_interpret":
+        d, i = grouped_distance_topk_pallas(
+            q, codes, scales, offsets, n_rows, k, metric, qformat, interpret=True, **kw
+        )
+    else:
+        raise ValueError(f"unknown impl {impl!r}")
+    return np.asarray(d), np.asarray(i)

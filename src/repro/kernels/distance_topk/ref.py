@@ -20,3 +20,56 @@ def distance_topk_ref(q, c, k: int, metric: str = "l2"):
     neg_d, idx = jax.lax.top_k(-d, k)
     # lax.top_k is stable (prefers lower index on ties) — matches the kernel
     return -neg_d, idx.astype(jnp.int32)
+
+
+def grouped_distance_topk_ref(
+    q, codes, scales, offsets, n_rows, k: int, metric: str = "l2", qformat: str = "int8"
+):
+    """Pure-numpy oracle for the grouped quantized kernel (and the CPU
+    serving path): batch-decode every group's codes, score them with the
+    same formulas as ``np_distances``, stable top-k.  q [G, D]; codes
+    [G, N, D]; scales/offsets/n_rows [G] -> (dists [G, k] f32, idx
+    [G, k] i32); rows past n_rows[g] come back as (inf, -1)."""
+    import numpy as np
+
+    q = np.asarray(q, np.float32)
+    G = q.shape[0]
+    codes = np.asarray(codes)
+    if G == 0 or codes.shape[1] == 0:
+        return (
+            np.full((G, k), np.inf, np.float32),
+            np.full((G, k), -1, np.int32),
+        )
+    nr = np.asarray(n_rows, np.int64)
+    # one batched decode + score over all groups (the CPU serving path
+    # runs this once per traversal round — a python loop per group would
+    # dominate the warm search)
+    if qformat == "float16":
+        c = codes.astype(np.float32)
+    else:
+        c = (
+            codes.astype(np.float32) * np.asarray(scales, np.float32)[:, None, None]
+            + np.asarray(offsets, np.float32)[:, None, None]
+        )
+    if metric == "ip":
+        d = -np.einsum("gd,gnd->gn", q, c, optimize=True)
+    elif metric == "l2":
+        qn = (q * q).sum(-1)[:, None]
+        cn = (c * c).sum(-1)
+        d = qn + cn - 2.0 * np.einsum("gd,gnd->gn", q, c, optimize=True)
+    else:  # cosine — mirror np_distances' normalization
+        qq = q / np.maximum(np.linalg.norm(q, axis=-1, keepdims=True), 1e-12)
+        cc = c / np.maximum(np.linalg.norm(c, axis=-1, keepdims=True), 1e-12)
+        d = 1.0 - np.einsum("gd,gnd->gn", qq, cc, optimize=True)
+    d = d.astype(np.float32, copy=False)
+    pad = np.arange(codes.shape[1])[None, :] >= nr[:, None]
+    d[pad] = np.inf
+    order = np.argsort(d, axis=1, kind="stable")[:, :k]
+    out_d = np.take_along_axis(d, order, axis=1)
+    out_i = np.where(np.isinf(out_d), -1, order).astype(np.int32)
+    if out_d.shape[1] < k:  # kop larger than the padded leaf width
+        fill_d = np.full((G, k - out_d.shape[1]), np.inf, np.float32)
+        fill_i = np.full((G, k - out_i.shape[1]), -1, np.int32)
+        out_d = np.concatenate([out_d, fill_d], axis=1)
+        out_i = np.concatenate([out_i, fill_i], axis=1)
+    return out_d, out_i

@@ -6,7 +6,12 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.kernels.distance_topk import distance_topk_pallas, distance_topk_ref
+from repro.kernels.distance_topk import (
+    distance_topk_pallas,
+    distance_topk_ref,
+    grouped_distance_topk_pallas,
+    grouped_distance_topk_ref,
+)
 from repro.kernels.flash_attention import flash_attention_pallas, mha_ref
 
 RNG = np.random.default_rng(0)
@@ -63,6 +68,76 @@ def test_distance_topk_property(B, N, D, metric, data):
     d0, i0 = distance_topk_ref(q, c, k, metric)
     np.testing.assert_allclose(np.asarray(d0), np.asarray(d1), rtol=1e-3, atol=1e-3)
     np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+
+
+# -------------------------------------------------- grouped quantized top-k
+def _make_groups(G, N, D, qformat, seed=0, short=False):
+    r = np.random.default_rng(seed)
+    from repro.core.quant import encode_node, qdtype
+
+    codes = np.zeros((G, N, D), qdtype(qformat))
+    scales = np.zeros(G, np.float32)
+    offsets = np.zeros(G, np.float32)
+    n_rows = r.integers(1, N + 1, size=G) if short else np.full(G, N)
+    for g in range(G):
+        emb = r.normal(size=(int(n_rows[g]), D)).astype(np.float32)
+        qn = encode_node(emb, qformat)
+        codes[g, : qn.n_rows] = qn.codes
+        scales[g], offsets[g] = qn.scale, qn.offset
+    q = r.normal(size=(G, D)).astype(np.float32)
+    return q, codes, scales, offsets, n_rows.astype(np.int32)
+
+
+@pytest.mark.parametrize("metric", ["l2", "ip", "cosine"])
+@pytest.mark.parametrize("qformat", ["int8", "float16"])
+def test_grouped_topk_matches_ref(metric, qformat):
+    q, codes, scales, offsets, nr = _make_groups(7, 96, 24, qformat, seed=5)
+    k = 16
+    d0, i0 = grouped_distance_topk_ref(q, codes, scales, offsets, nr, k, metric, qformat)
+    d1, i1 = grouped_distance_topk_pallas(
+        q, codes, scales, offsets, nr, k, metric, qformat, bn=32, interpret=True
+    )
+    np.testing.assert_allclose(np.asarray(d0), np.asarray(d1), rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+
+
+def test_grouped_topk_short_groups_and_nondivisible_bn():
+    # ragged valid counts, k larger than some groups, N not a bn multiple
+    q, codes, scales, offsets, nr = _make_groups(9, 70, 16, "int8", seed=6, short=True)
+    k = 48
+    d0, i0 = grouped_distance_topk_ref(q, codes, scales, offsets, nr, k, "l2")
+    d1, i1 = grouped_distance_topk_pallas(
+        q, codes, scales, offsets, nr, k, "l2", bn=32, interpret=True
+    )
+    np.testing.assert_allclose(np.asarray(d0), np.asarray(d1), rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    # groups with fewer than k valid rows pad with (inf, -1)
+    for g in range(len(nr)):
+        assert np.all(np.asarray(i1)[g, int(nr[g]) :] == -1)
+        assert np.all(np.isinf(np.asarray(d1)[g, int(nr[g]) :]))
+
+
+def test_grouped_topk_empty_and_zero_rows():
+    d, i = grouped_distance_topk_ref(
+        np.zeros((0, 8), np.float32),
+        np.zeros((0, 16, 8), np.int8),
+        np.zeros(0, np.float32),
+        np.zeros(0, np.float32),
+        np.zeros(0, np.int32),
+        4,
+        "l2",
+    )
+    assert d.shape == (0, 4) and i.shape == (0, 4)
+    # a group whose leaf is entirely past n_rows comes back all-invalid
+    q, codes, scales, offsets, nr = _make_groups(3, 32, 8, "int8", seed=7)
+    nr = nr.copy()
+    nr[1] = 0
+    d0, i0 = grouped_distance_topk_ref(q, codes, scales, offsets, nr, 8, "l2")
+    d1, i1 = grouped_distance_topk_pallas(
+        q, codes, scales, offsets, nr, 8, "l2", bn=32, interpret=True
+    )
+    assert np.all(i0[1] == -1) and np.all(np.isinf(d0[1]))
+    np.testing.assert_array_equal(i0, np.asarray(i1))
 
 
 # ---------------------------------------------------------- flash attention

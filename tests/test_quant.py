@@ -1,0 +1,314 @@
+"""Quantized leaf blocks + device-resident scoring pipeline (blob v3).
+
+Covers the quant seam end to end: encode/decode error bounds, the v3
+on-disk format (header, persisted companions, v2 upgrade), companion
+maintenance across insert/split/delete/compact, the fstore
+encode-on-the-fly fallback, bit-parity of the quantized engine against
+the fp32 engines, the one-launch-per-round contract, scorer shape
+bucketing, and hot-level pinning.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import build_index
+from repro.core.api import open_index
+from repro.core.distances import np_distances
+from repro.core.lifecycle import ECPBuildConfig
+from repro.core.quant import (
+    QFORMATS,
+    decode_codes,
+    distance_bounds,
+    encode_node,
+    reconstruction_radius,
+)
+from repro.core.search import ECPIndex, make_kernel_scorer
+from repro.core.store import BlobStore, convert
+
+RNG = np.random.default_rng(42)
+
+
+# ------------------------------------------------------------- encode/decode
+@pytest.mark.parametrize("qformat", QFORMATS)
+@pytest.mark.parametrize("scale_pow", [-3, 0, 4])
+def test_encode_decode_error_bound(qformat, scale_pow):
+    emb = (RNG.standard_normal((96, 24)) * 10.0**scale_pow).astype(np.float32)
+    qn = encode_node(emb, qformat)
+    dec = qn.decode()
+    # per-row L2 reconstruction error is bounded by the node radius
+    err = np.linalg.norm(dec.astype(np.float64) - emb.astype(np.float64), axis=1)
+    assert float(err.max()) <= qn.radius
+    assert qn.radius == reconstruction_radius(qn.scale, emb.shape[1])
+    if qformat == "int8":
+        assert qn.codes.dtype == np.int8
+        assert qn.codes.min() >= -127 and qn.codes.max() <= 127
+
+
+def test_encode_f16_storage_is_exact():
+    # storage dtype is f16: rows arriving at encode are already f16-rounded,
+    # so the f16 tier is bit-exact and advertises radius 0
+    emb = RNG.standard_normal((32, 16)).astype(np.float16).astype(np.float32)
+    qn = encode_node(emb, "float16")
+    assert qn.scale == 0.0 and qn.radius == 0.0
+    np.testing.assert_array_equal(qn.decode(), emb)
+
+
+def test_encode_constant_node_exact():
+    emb = np.full((8, 12), 3.25, np.float32)
+    qn = encode_node(emb, "int8")
+    assert qn.scale == 0.0
+    np.testing.assert_array_equal(qn.decode(), emb)
+
+
+def test_encode_deterministic_vs_f32_params():
+    # codes must be computed from the f32-rounded scale/offset the blob
+    # persists, so blob-persisted and on-the-fly codes agree bit-for-bit
+    emb = RNG.standard_normal((64, 20)).astype(np.float32)
+    a, b = encode_node(emb, "int8"), encode_node(emb.copy(), "int8")
+    np.testing.assert_array_equal(a.codes, b.codes)
+    assert a.scale == np.float32(a.scale) and a.offset == np.float32(a.offset)
+    np.testing.assert_array_equal(
+        decode_codes(a.codes, a.scale, a.offset, "int8"), b.decode()
+    )
+
+
+@pytest.mark.parametrize("metric", ["l2", "ip", "cosine"])
+def test_distance_bounds_sound(metric):
+    q = RNG.standard_normal(24).astype(np.float32)
+    emb = RNG.standard_normal((128, 24)).astype(np.float32)
+    qn = encode_node(emb, "int8")
+    d_approx = np_distances(q, qn.decode(), metric)
+    d_exact = np_distances(q, emb, metric)
+    lb, ub = distance_bounds(
+        d_approx, qn.radius, metric, q_norm=float(np.linalg.norm(q))
+    )
+    assert np.all(lb <= d_exact + 1e-9) and np.all(d_exact <= ub + 1e-9)
+
+
+# ------------------------------------------------------------ on-disk format
+@pytest.fixture(scope="module")
+def small_index(tmp_path_factory):
+    td = tmp_path_factory.mktemp("quant_idx")
+    n, dim = 900, 16
+    data = np.random.default_rng(3).standard_normal((n, dim)).astype(np.float32)
+    fs = os.path.join(td, "fs")
+    build_index(data, fs, ECPBuildConfig(levels=2, metric="l2", cluster_cap=48))
+    v2 = os.path.join(td, "v2.bin")
+    v3 = os.path.join(td, "v3.bin")
+    convert(fs, v2, format=2)
+    convert(fs, v3, format=2, quant="int8")
+    return {"fs": fs, "v2": v2, "v3": v3, "data": data, "dim": dim}
+
+
+def _leaf_keys(store):
+    from repro.core import layout
+
+    info = layout.IndexInfo.from_attrs(store.read_attrs(layout.INFO))
+    return [(info.levels, j) for j in range(info.nodes_per_level[-1])]
+
+
+def _assert_quant_matches_fp(store, qformat):
+    """Persisted companions must equal a fresh encode of the fp rows."""
+    for lv, nd in _leaf_keys(store):
+        emb, _ = store.get_node(lv, nd)
+        ref = encode_node(emb, qformat)
+        got = store.get_quantized(lv, nd)
+        assert got.qformat == qformat
+        np.testing.assert_array_equal(got.codes, ref.codes)
+        assert got.scale == ref.scale and got.offset == ref.offset
+
+
+def test_blob_v3_header_and_companions(small_index):
+    s = BlobStore(small_index["v3"])
+    assert s.format == 3
+    assert s.quant_format == "int8"
+    assert s.q_block_bytes > 0
+    _assert_quant_matches_fp(s, "int8")
+
+
+def test_blob_v3_partial_row_reads(small_index):
+    s = BlobStore(small_index["v3"])
+    for lv, nd in _leaf_keys(s)[:4]:
+        emb, ids = s.get_node(lv, nd)
+        n = len(emb)
+        rows = np.unique(RNG.integers(0, n, size=max(1, n // 3)))
+        pe, pi = s.get_node_rows(lv, nd, rows)
+        np.testing.assert_array_equal(pe, emb[rows])
+        np.testing.assert_array_equal(pi, ids[rows])
+        np.testing.assert_array_equal(s.get_node_ids(lv, nd), ids)
+
+
+def test_blob_v2_reads_and_upgrade(small_index, tmp_path):
+    v2 = BlobStore(small_index["v2"])
+    assert v2.format == 2 and v2.quant_format is None
+    # v2 has no companions: get_quantized encodes on the fly
+    lv, nd = _leaf_keys(v2)[0]
+    emb, _ = v2.get_node(lv, nd)
+    got = v2.get_quantized(lv, nd, "int8")
+    np.testing.assert_array_equal(got.codes, encode_node(emb, "int8").codes)
+    # upgrade: convert(v2 blob) with quant writes a v3 blob, fp payload intact
+    up = tmp_path / "up.bin"
+    convert(small_index["v2"], up, quant="int8")
+    v3 = BlobStore(up)
+    assert v3.format == 3 and v3.quant_format == "int8"
+    for key in _leaf_keys(v2):
+        e2, i2 = v2.get_node(*key)
+        e3, i3 = v3.get_node(*key)
+        np.testing.assert_array_equal(e2, e3)
+        np.testing.assert_array_equal(i2, i3)
+    _assert_quant_matches_fp(v3, "int8")
+
+
+def test_fstore_quantized_fallback(small_index):
+    ix = open_index(small_index["fs"])
+    s = ix.store
+    assert s.quant_format is None
+    lv, nd = _leaf_keys(s)[0]
+    emb, _ = s.get_node(lv, nd)
+    got = s.get_quantized(lv, nd, "int8")
+    np.testing.assert_array_equal(got.codes, encode_node(emb, "int8").codes)
+    (gn,) = s.get_nodes_quantized([(lv, nd)], "float16")
+    np.testing.assert_array_equal(gn.decode(), emb)
+
+
+# --------------------------------------------------- survival under mutation
+def test_quant_blocks_survive_mutations(small_index, tmp_path):
+    import shutil
+
+    blob = tmp_path / "mut.bin"
+    shutil.copy(small_index["v3"], blob)
+    dim = small_index["dim"]
+    ix = open_index(str(blob))
+    rng = np.random.default_rng(9)
+
+    # insert enough rows to force leaf splits (cluster_cap=48)
+    res = ix.insert(rng.standard_normal((300, dim)).astype(np.float32))
+    assert res["inserted"] == 300
+    _assert_quant_matches_fp(ix.store, "int8")
+
+    # delete a third of the original ids (tombstones; fp rows untouched)
+    ids0 = np.concatenate([ix.store.get_node(lv, nd)[1] for lv, nd in _leaf_keys(ix.store)])
+    victims = ids0[:: 3][:200]
+    assert ix.delete(victims) > 0
+    _assert_quant_matches_fp(ix.store, "int8")
+
+    # compact rewrites the blob; the quant section must ride along
+    ix.compact()
+    s = ix.store
+    assert s.format == 3 and s.quant_format == "int8"
+    _assert_quant_matches_fp(s, "int8")
+
+    # and the index still answers quantized queries bit-identically
+    q = rng.standard_normal((4, dim)).astype(np.float32)
+    ref = open_index(str(blob)).search(q, 20, b=6)
+    got = open_index(str(blob), quantized=True).search(q, 20, b=6)
+    np.testing.assert_array_equal(ref.ids, got.ids)
+    np.testing.assert_array_equal(ref.dists, got.dists)
+
+
+# ------------------------------------------------------------- engine parity
+@pytest.mark.parametrize("backend", ["fs", "v3"])
+def test_quant_bit_parity(small_index, backend):
+    dim = small_index["dim"]
+    Q = np.random.default_rng(11).standard_normal((12, dim)).astype(np.float32)
+    flat = open_index(small_index[backend], engine="flat")
+    leg = open_index(small_index[backend], engine="legacy")
+    qi = open_index(small_index[backend], engine="flat", quantized=True)
+    for k, b in [(10, 4), (50, 8)]:
+        r_flat = flat.search(Q, k, b=b)
+        r_q = qi.search(Q, k, b=b)
+        np.testing.assert_array_equal(r_flat.ids, r_q.ids)
+        np.testing.assert_array_equal(r_flat.dists, r_q.dists)
+        # warm repeat (row caches promoted to full nodes must not drift)
+        r_q2 = qi.search(Q, k, b=b)
+        np.testing.assert_array_equal(r_flat.ids, r_q2.ids)
+        np.testing.assert_array_equal(r_flat.dists, r_q2.dists)
+        # the legacy oracle agrees per-row
+        for row in range(len(Q)):
+            r_leg = leg.search(Q[row], k, b=b)
+            np.testing.assert_array_equal(r_leg.ids, r_q.ids[row])
+            np.testing.assert_array_equal(r_leg.dists, r_q.dists[row])
+
+
+def test_quant_parity_excludes_and_continuation(small_index):
+    dim = small_index["dim"]
+    rng = np.random.default_rng(13)
+    Q = rng.standard_normal((6, dim)).astype(np.float32)
+    flat = open_index(small_index["v3"], engine="flat")
+    qi = open_index(small_index["v3"], quantized=True, rerank_depth=60)
+    probe = flat.search(Q, 10, b=4)
+    excl = set(int(i) for i in probe.ids[:, :5].ravel() if i >= 0)
+    ra = flat.search(Q, 30, b=6, exclude=excl)
+    rz = qi.search(Q, 30, b=6, exclude=excl)
+    np.testing.assert_array_equal(ra.ids, rz.ids)
+    np.testing.assert_array_equal(ra.dists, rz.dists)
+    # continuation drains further increments through the same rerank seam
+    na, nz = ra.query.next(30), rz.query.next(30)
+    np.testing.assert_array_equal(na.ids, nz.ids)
+    np.testing.assert_array_equal(na.dists, nz.dists)
+
+
+def test_quant_f16_tier_parity(small_index, tmp_path):
+    blob = tmp_path / "f16.bin"
+    convert(small_index["fs"], blob, quant="float16")
+    s = BlobStore(blob)
+    assert s.format == 3 and s.quant_format == "float16"
+    dim = small_index["dim"]
+    Q = np.random.default_rng(17).standard_normal((8, dim)).astype(np.float32)
+    ra = open_index(small_index["v2"]).search(Q, 25, b=6)
+    rz = open_index(str(blob), quantized=True).search(Q, 25, b=6)
+    np.testing.assert_array_equal(ra.ids, rz.ids)
+    np.testing.assert_array_equal(ra.dists, rz.dists)
+
+
+# ----------------------------------------------------- one launch per round
+def test_one_device_launch_per_round(small_index, monkeypatch):
+    from repro.kernels.distance_topk import ops
+
+    calls = {"n": 0}
+    orig = ops.grouped_distance_topk
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(ops, "grouped_distance_topk", counting)
+    dim = small_index["dim"]
+    Q = np.random.default_rng(19).standard_normal((8, dim)).astype(np.float32)
+    qi = open_index(small_index["v3"], quantized=True)
+    r = qi.search(Q, 40, b=8)
+    st = r.query.batch_stats
+    assert calls["n"] >= 1
+    # THE acceptance contract: one grouped launch per leaf-bearing round
+    assert calls["n"] == st.kernel_launches
+    assert st.kernel_launches <= st.rounds
+
+
+# ------------------------------------------------------- scorer + pinning
+def test_kernel_scorer_shape_bucketing():
+    scorer = make_kernel_scorer(min_rows=1, impl="ref", bucket=128)
+    q = RNG.standard_normal(16).astype(np.float32)
+    for n in (40, 77, 100, 128):  # heterogeneous leaves, one bucket
+        emb = RNG.standard_normal((n, 16)).astype(np.float32)
+        d = scorer(q, emb, "l2")
+        np.testing.assert_allclose(d, np_distances(q, emb, "l2"), rtol=1e-5, atol=1e-5)
+    assert scorer.compile_shapes == {(128, 128)}
+    scorer(q, RNG.standard_normal((200, 16)).astype(np.float32), "l2")
+    assert scorer.compile_shapes == {(128, 128), (256, 256)}
+
+
+def test_pin_internal_zero_warm_internal_reads(small_index):
+    ix = open_index(small_index["v3"], quantized=True, pin_internal=True)
+    assert ix.cache.n_pinned > 0
+    Q = np.random.default_rng(23).standard_normal((6, small_index["dim"]))
+    Q = Q.astype(np.float32)
+    ix.search(Q, 20, b=6)
+    before = ix.store.io.internal_reads
+    ix.search(Q, 20, b=6)
+    assert ix.store.io.internal_reads == before
+
+
+def test_quantized_rejects_legacy_engine(small_index):
+    with pytest.raises(ValueError):
+        ECPIndex(small_index["v3"], engine="legacy", quantized=True)
