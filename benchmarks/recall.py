@@ -1,0 +1,223 @@
+"""Recall-knob frontier — what the two recall knobs buy over the paper's
+strict best-first traversal at equal (or lower) effort b:
+
+  * ``probe_m`` (query time): descend through the top-m frontier nodes
+    per traversal step instead of only the single best.
+  * ``spill_s`` (build time): replicate border vectors into up to s
+    additional leaves whose leaders are nearly as close as the primary.
+
+The sweep builds a base index and a spill twin over the same collection
+(fixed seed, fixed scale — the rows are deterministic and comparable
+across runs regardless of the bench suite's --fast flag), converts both
+to blobs, and measures recall@k against the exact top-k along a
+``(b, probe_m, spill_s)`` grid.  ``run()`` feeds the rows to
+benchmarks/run.py (they land in BENCH_search.json as ``frontier/*``
+scenarios); ``smoke()`` is the CI recall-smoke gate:
+
+  1. parity    — flat-batch at probe_m=1 over the base blob is
+                 bit-identical to the legacy oracle (per query),
+  2. monotonic — recall@k never drops as probe_m widens or spill lands,
+  3. improved  — some widened setting beats the probe_m=1 baseline
+                 strictly at equal or lower b,
+  4. baseline  — recall at the reference (b, probe_m=1) setting has not
+                 dropped below the committed BENCH_search.json row.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+# (b, probe_m, spill_s); (REF_B, 1, 0) is the committed-baseline reference
+REF_B = 16
+GRID = (
+    (8, 1, 0),
+    (8, 2, 0),
+    (8, 2, 1),
+    (16, 1, 0),
+    (16, 2, 0),
+    (16, 4, 0),
+    (16, 1, 1),
+    (16, 2, 1),
+)
+
+
+def _build_suite(td: str, *, n: int, dim: int, spill_levels=(1,)):
+    """Base + spill indexes over one clustered collection -> (data,
+    queries, {spill_s: blob_path})."""
+    from repro.core import ECPBuildConfig, build_index, convert
+    from repro.data import clustered_vectors
+
+    data, _ = clustered_vectors(0, n=n, dim=dim, n_clusters=48)
+    rng = np.random.default_rng(17)
+    queries = (
+        data[rng.integers(0, n, 32)] + rng.normal(0, 0.05, (32, dim))
+    ).astype(np.float32)
+    blobs = {}
+    for s in (0, *spill_levels):
+        p = f"{td}/idx_s{s}"
+        build_index(
+            data, p,
+            ECPBuildConfig(levels=2, cluster_cap=max(64, n // 256), spill_s=s),
+        )
+        blobs[s] = str(convert(p, f"{td}/idx_s{s}.blob"))
+    return data, queries, blobs
+
+
+def _exact_topk(data: np.ndarray, queries: np.ndarray, k: int) -> np.ndarray:
+    """Brute-force top-k positions (== default item ids) per query."""
+    from repro.core.distances import np_distances
+
+    d = np_distances(queries, np.asarray(data, np.float32), "l2")
+    return np.argsort(d, axis=1, kind="stable")[:, :k]
+
+
+def _assert_probe1_parity(blob: str, queries: np.ndarray, k: int, b: int) -> None:
+    """probe_m=1 must be bit-identical to the legacy oracle — the gate
+    that multi-probe stays a pure superset feature."""
+    from repro.core import open_index
+
+    flat = open_index(blob, mode="file", backend="blob")
+    leg = open_index(blob, mode="file", backend="blob", engine="legacy")
+    try:
+        rs = flat.search(queries, k, b=b, probe_m=1)
+        for r, q in enumerate(queries):
+            ref = leg.search(q, k, b=b)
+            np.testing.assert_array_equal(
+                rs.ids[r], ref.ids, err_msg=f"probe_m=1 parity break, query {r}"
+            )
+            np.testing.assert_array_equal(
+                rs.dists[r], ref.dists, err_msg=f"probe_m=1 parity break, query {r}"
+            )
+    finally:
+        flat.close()
+        leg.close()
+
+
+def sweep(
+    *,
+    blobs: dict[int, str],
+    queries: np.ndarray,
+    exact: np.ndarray,
+    k: int = 10,
+    grid=GRID,
+    runs: int = 1,
+) -> list[dict]:
+    """One row per (b, probe_m, spill_s) grid point: recall@k vs the
+    exact top-k, warm us_per_call, cold-pass IOStats."""
+    from repro.core import open_index
+
+    B = len(queries)
+    exact_sets = [set(map(int, row)) for row in exact]
+    rows = []
+    for b, m, s in grid:
+        idx = open_index(blobs[s], mode="file", backend="blob")
+        try:
+            io0 = idx.store.io.snapshot()
+            res = idx.search(queries, k, b=b, probe_m=m)
+            cold_io = idx.store.io.delta(io0)
+            warm = []
+            for _ in range(runs):
+                t0 = time.perf_counter()
+                idx.search(queries, k, b=b, probe_m=m)
+                warm.append(time.perf_counter() - t0)
+            hits = sum(
+                len(exact_sets[r] & {int(x) for x in res.ids[r] if x >= 0})
+                for r in range(B)
+            )
+            rows.append(
+                {
+                    "scenario": f"recall/b={b}/m={m}/s={s}",
+                    "us_per_call": round(float(np.mean(warm)) / B * 1e6, 1),
+                    "recall": round(hits / (B * k), 4),
+                    "bytes_read": cold_io.bytes_read,
+                    "reads_issued": cold_io.reads_issued,
+                }
+            )
+        finally:
+            idx.close()
+    return rows
+
+
+def run(*, n: int = 6000, dim: int = 32, k: int = 10, runs: int = 1) -> list[dict]:
+    """The run.py section: the deterministic fixed-scale sweep (+ the
+    probe_m=1 parity gate).  Scale is intentionally NOT tied to --fast so
+    the committed frontier rows stay comparable."""
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as td:
+        data, queries, blobs = _build_suite(td, n=n, dim=dim)
+        exact = _exact_topk(data, queries, k)
+        _assert_probe1_parity(blobs[0], queries, k, REF_B)
+        return sweep(blobs=blobs, queries=queries, exact=exact, k=k, runs=runs)
+
+
+def _recall_of(rows: list[dict], b: int, m: int, s: int) -> float:
+    return next(
+        r["recall"] for r in rows if r["scenario"] == f"recall/b={b}/m={m}/s={s}"
+    )
+
+
+def smoke(bench_json: str | None = "BENCH_search.json") -> None:
+    """CI recall-smoke: run the sweep and enforce the four gates (see
+    module docstring).  ``bench_json`` points at the committed baseline
+    artifact; a missing file or missing frontier rows skips gate 4 (first
+    commit of the artifact) rather than failing."""
+    rows = run()
+    for r in rows:
+        print(r)
+
+    base = _recall_of(rows, REF_B, 1, 0)
+    # gate 2: monotone along the widening axes (non-strict)
+    assert _recall_of(rows, REF_B, 2, 0) >= base, "recall dropped at probe_m=2"
+    assert _recall_of(rows, REF_B, 4, 0) >= _recall_of(rows, REF_B, 2, 0), (
+        "recall dropped from probe_m=2 to probe_m=4"
+    )
+    assert _recall_of(rows, REF_B, 1, 1) >= base, "recall dropped with spill_s=1"
+    # gate 3: something widened must strictly beat the baseline at <= b
+    widened = [
+        r["recall"]
+        for r in rows
+        if r["scenario"] != f"recall/b={REF_B}/m=1/s=0"
+        and int(r["scenario"].split("/")[1][2:]) <= REF_B
+    ]
+    assert max(widened) > base, (
+        f"no widened setting beats the probe_m=1 baseline (recall@10={base})"
+    )
+    # gate 4: no regression vs the committed baseline row
+    ref_name = f"frontier/recall/b={REF_B}/m=1/s=0"
+    p = Path(bench_json) if bench_json else None
+    if p is not None and p.exists():
+        committed = json.loads(p.read_text())
+        row = next(
+            (x for x in committed.get("scenarios", []) if x["name"] == ref_name),
+            None,
+        )
+        if row is not None:
+            want = float(row["derived"].split("recall=")[1].split(";")[0])
+            assert base >= want - 1e-6, (
+                f"recall@10 regression at the reference setting: "
+                f"{base} < committed {want}"
+            )
+            print(f"recall smoke OK: baseline {base} vs committed {want}")
+            return
+    print(f"recall smoke OK: baseline {base} (no committed row to compare)")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="parity + monotonicity + improvement + committed-baseline gates",
+    )
+    ap.add_argument("--bench-json", default="BENCH_search.json")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke(args.bench_json)
+    else:
+        for row in run():
+            print(row)

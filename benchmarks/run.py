@@ -63,6 +63,7 @@ def main() -> None:
         federation,
         indexes,
         lifecycle,
+        recall,
         roofline,
         search_engine,
         serving,
@@ -121,6 +122,16 @@ def main() -> None:
         "Recall/latency frontier — quantized scan+rerank vs plain blob "
         "batch path per effort b (recall@k vs exact top-k)",
         fr,
+    )
+
+    # recall knobs: multi-probe traversal + build-time spill vs the strict
+    # best-first baseline (probe_m=1 parity gate enforced inside)
+    rk = recall.run(runs=runs)
+    _print_table(
+        "Recall knobs — probe_m (multi-probe traversal) and spill_s "
+        "(build-time replication) vs strict best-first at equal effort b "
+        "(recall@10 vs exact)",
+        rk,
     )
 
     lc = lifecycle.run(runs=runs, n_insert=256 if args.fast else 512)
@@ -215,7 +226,7 @@ def main() -> None:
                 "reads_issued": r["reads_issued"],
             },
         )
-    for r in fr:
+    for r in fr + rk:
         emit(
             f"frontier/{r['scenario']}",
             r["us_per_call"],

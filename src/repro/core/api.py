@@ -479,6 +479,13 @@ def open_index(
     ``prefetch=True`` wraps the store with async frontier prefetching
     (file mode only).
 
+    Extra keywords flow to the opened class; notably ``probe_m=<m>``
+    (file mode and federations) sets the default multi-probe width —
+    how many frontier nodes each traversal step descends through.
+    ``probe_m=1`` is the paper's strict best-first traversal and is
+    bit-identical to it; larger values trade extra leaf reads for
+    recall.  Per-call override: ``search(..., probe_m=m)``.
+
     A path holding a federation manifest (``federation.json``) opens as a
     ``FederatedIndex`` — one logical index scatter-gathering over its
     shards (core/federation.py); it is file-mode only.

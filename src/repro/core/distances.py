@@ -25,9 +25,11 @@ def np_distances(
     """q: [B, D] or [D]; c: [N, D] -> [B, N] or [N] float32 distances.
 
     ``c_sqnorms`` optionally supplies precomputed ``(c * c).sum(-1)`` for
-    the l2 metric (per-node norm caching in the search engine).  It MUST
-    equal that exact expression over the float32 ``c`` — then results are
-    bit-identical to the uncached path.  Ignored for other metrics.
+    the l2 and cosine metrics (per-node norm caching in the search
+    engine).  It MUST equal that exact expression over the float32 ``c``
+    — then results are bit-identical to the uncached path (for cosine,
+    ``np.sqrt`` of the reduction is bitwise what ``np.linalg.norm``
+    computes).  Ignored for ip.
     """
     _check(metric)
     q = np.asarray(q, np.float32)
@@ -43,7 +45,11 @@ def np_distances(
         d = qn + cn - 2.0 * (q @ c.T)
     else:  # cosine
         qn = q / np.maximum(np.linalg.norm(q, axis=-1, keepdims=True), 1e-12)
-        cn = c / np.maximum(np.linalg.norm(c, axis=-1, keepdims=True), 1e-12)
+        if c_sqnorms is None:
+            c_norm = np.linalg.norm(c, axis=-1)
+        else:
+            c_norm = np.sqrt(np.asarray(c_sqnorms, np.float32))
+        cn = c / np.maximum(c_norm[:, None], 1e-12)
         d = 1.0 - qn @ cn.T
     return d[0] if squeeze else d
 

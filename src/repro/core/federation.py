@@ -184,6 +184,7 @@ def allocate_effort(
     n_shards: int | None = None,
     b_min: int = 1,
     top_m: int | None = None,
+    probe_m: int = 1,
 ) -> tuple[np.ndarray, np.ndarray]:
     """Split total effort ``b`` across shards by a global leader vote.
 
@@ -193,10 +194,19 @@ def allocate_effort(
     (every shard statistically identical) degrades to a near-uniform
     split, while a semantic split (one shard owns the query's region)
     concentrates effort there.  Effort goes to the ``top_m`` most-voted
-    shards (clamped so every probed shard can be funded at least
-    ``b_min``), proportionally to votes, floored at ``b_min``, and
-    rounding is repaired so ``alloc.sum() == b`` EXACTLY — federating
-    conserves total effort, never amplifies it.
+    shards, proportionally to votes, floored at ``b_min``, and rounding
+    is repaired so ``alloc.sum() == b`` EXACTLY — federating conserves
+    total effort, never amplifies it.
+
+    Budget-floor rule (the documented clamp): a probed shard must be
+    fundable at its effective floor ``b_min_eff = max(1, b_min) *
+    max(1, probe_m)`` — multi-probe traversal (``probe_m > 1``) widens
+    each shard's per-increment leaf appetite, so the floor scales with
+    it.  When ``b < m * b_min_eff`` the probe count is CLAMPED to
+    ``max(1, b // b_min_eff)`` rather than thinning allocations below
+    the floor; with ``b_min=0`` there is no caller floor (the effective
+    floor is 1: a probed shard always gets at least one leaf).  Negative
+    ``b_min`` raises ``ValueError``.
 
     Returns ``(probe, alloc)``: probed shard indices (most-voted first)
     and their integer ``b`` shares.
@@ -205,9 +215,11 @@ def allocate_effort(
     owner = np.asarray(owner, np.int64).reshape(-1)
     if len(d) == 0 or len(d) != len(owner):
         raise ValueError("allocate_effort: empty or mismatched router arrays")
+    if int(b_min) < 0:
+        raise ValueError(f"b_min must be >= 0, got {b_min}")
     S = int(owner.max()) + 1 if n_shards is None else int(n_shards)
     b = max(1, int(b))
-    b_min = max(1, int(b_min))
+    b_min_eff = max(1, int(b_min)) * max(1, int(probe_m))
     ranked = np.argsort(d, kind="stable")[: max(1, b)]
     votes = np.zeros(S, np.float64)
     np.add.at(votes, owner[ranked], 1.0)
@@ -220,14 +232,15 @@ def allocate_effort(
     )
     cand = [i for i in cand if votes[i] > 0] or cand[:1]
     m = len(cand) if top_m is None else max(1, min(int(top_m), len(cand)))
-    m = min(m, max(1, b // b_min))  # cannot fund more than b // b_min shards
+    m = min(m, max(1, b // b_min_eff))  # the documented clamp: never fund
+    # more shards than b can cover at b_min_eff each
     probe = np.asarray(cand[:m], np.int64)
     if m == 1:
         return probe, np.array([b], np.int64)
     w = votes[probe]
     if w.sum() <= 0:
         w = np.ones(m)
-    alloc = np.maximum(b_min, np.floor(b * w / w.sum())).astype(np.int64)
+    alloc = np.maximum(b_min_eff, np.floor(b * w / w.sum())).astype(np.int64)
     diff = b - int(alloc.sum())
     i = 0
     while diff > 0:  # hand out the remainder most-voted-first
@@ -236,7 +249,7 @@ def allocate_effort(
         i += 1
     while diff < 0:  # claw back overshoot least-voted-first, floor intact
         j = m - 1 - (i % m)
-        if alloc[j] > b_min:
+        if alloc[j] > b_min_eff:
             alloc[j] -= 1
             diff += 1
         i += 1
@@ -399,7 +412,8 @@ class _ScatterGather:
     Hosts provide ``_shard_names`` / ``_shard_objs`` (parallel lists),
     ``_router_emb`` (stacked leader centroids), ``_router_owner`` (which
     shard each centroid belongs to), ``_router_slices`` (one ``(lo, hi)``
-    per shard into the stack), ``metric``, ``b_min`` and ``top_m``."""
+    per shard into the stack), ``metric``, ``b_min``, ``top_m`` and
+    ``probe_m``."""
 
     _shard_names: list
     _shard_objs: list
@@ -409,6 +423,7 @@ class _ScatterGather:
     metric: str
     b_min: int
     top_m: int | None
+    probe_m: int = 1
 
     def shard_affinity(self, q: np.ndarray) -> np.ndarray:
         """Router score per shard: distance to its nearest top-level
@@ -420,7 +435,7 @@ class _ScatterGather:
         return np.stack([d[:, lo:hi].min(axis=1) for lo, hi in lo_hi], axis=1)
 
     def _search_row(
-        self, q: np.ndarray, k: int, b: int, mx_inc: int, exclude
+        self, q: np.ndarray, k: int, b: int, mx_inc: int, exclude, probe_m: int
     ) -> _RowState:
         probe, alloc = allocate_effort(
             np_distances(q, self._router_emb, self.metric),
@@ -429,12 +444,13 @@ class _ScatterGather:
             n_shards=len(self._shard_objs),
             b_min=self.b_min,
             top_m=self.top_m,
+            probe_m=probe_m,  # probing widens per-shard effort demand
         )
         streams, allocation = [], {}
         for si, bi in zip(probe, alloc):
             name = self._shard_names[int(si)]
             rs = self._shard_objs[int(si)].search(
-                q, k, b=int(bi), mx_inc=mx_inc, exclude=exclude
+                q, k, b=int(bi), mx_inc=mx_inc, exclude=exclude, probe_m=probe_m
             )
             allocation[name] = int(bi)
             streams.append(_ShardStream(name, rs))
@@ -448,18 +464,22 @@ class _ScatterGather:
         b: int | None = 8,
         mx_inc: int = 4,
         exclude: set | None = None,
+        probe_m: int | None = None,
     ) -> ResultSet:
         """Scatter-gather search over one vector [D] or a batch [B, D]:
         route, split ``b``, search each probed shard, merge the emissions
         through one global top-k (shard id spaces are disjoint, so the
-        merge never deduplicates)."""
+        merge never deduplicates).  ``probe_m`` (default: the federation's
+        configured value) is forwarded to every probed shard's traversal
+        and widens the allocator's per-shard funding floor."""
         if not self._shard_objs:
             raise ValueError("federation has no shards")
         b = 8 if b is None else int(b)
+        pm = self.probe_m if probe_m is None else max(1, int(probe_m))
         q = np.asarray(q, np.float32)
         single = q.ndim == 1
         Q = q[None, :] if single else q
-        states = [self._search_row(row, k, b, mx_inc, exclude) for row in Q]
+        states = [self._search_row(row, k, b, mx_inc, exclude, pm) for row in Q]
         rows = [st.merge(k, refill=False) for st in states]
         d, i = pack_rows([r[0] for r in rows], [r[1] for r in rows], k)
         query = FederatedQuery(states, single=single)
@@ -487,6 +507,7 @@ class FederatedIndex(_ScatterGather):
         cache_max_bytes: int | None = None,
         b_min: int = 1,
         top_m: int | None = None,
+        probe_m: int = 1,
         balance_factor: float = 2.0,
         **shard_kw,
     ):
@@ -504,6 +525,7 @@ class FederatedIndex(_ScatterGather):
         self._mut_lock = threading.RLock()
         self.b_min = max(1, int(b_min))
         self.top_m = top_m
+        self.probe_m = max(1, int(probe_m))
         self.balance_factor = float(balance_factor)
         self._default_backend = backend
         self._shard_kw = dict(prefetch=prefetch, **shard_kw)
@@ -832,6 +854,7 @@ class FederatedSnapshot(_ScatterGather):
         self.metric = parent.metric
         self.b_min = parent.b_min
         self.top_m = parent.top_m
+        self.probe_m = parent.probe_m
         self.generation = sum(s.generation for s in self._shard_objs)
         self._refs = 1
         self._lock = threading.Lock()

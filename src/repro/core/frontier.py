@@ -175,17 +175,26 @@ class CandidateBuffer:
     argsort — the exact order of the old list-append + stable ``sort``:
     by distance, ties by scan order, previously-merged items first.
     ``take(k)`` emits the k best by advancing a start offset.
+
+    ``dedup=True`` (spill-built indexes, where a vector may be replicated
+    into several leaves) drops every staged id that was already committed
+    or emitted, keeping the first occurrence, so ``take``/``next(k)``
+    never yields an id twice.  Replica distances are bitwise identical —
+    each distance is a dot product over that row's bytes alone — so which
+    copy survives does not affect the emitted (d, id) values.
     """
 
-    __slots__ = ("d", "i", "start", "_staged_d", "_staged_i", "_staged_n")
+    __slots__ = ("d", "i", "start", "_staged_d", "_staged_i", "_staged_n", "dedup", "_seen")
 
-    def __init__(self):
+    def __init__(self, dedup: bool = False):
         self.d = np.empty(0, np.float32)
         self.i = np.empty(0, np.int64)
         self.start = 0
         self._staged_d: list[np.ndarray] = []
         self._staged_i: list[np.ndarray] = []
         self._staged_n = 0
+        self.dedup = bool(dedup)
+        self._seen: set[int] = set()
 
     def __len__(self) -> int:
         return (len(self.d) - self.start) + self._staged_n
@@ -205,6 +214,10 @@ class CandidateBuffer:
         increment)."""
         if not self._staged_n:
             return
+        if self.dedup:
+            self._drop_seen()
+            if not self._staged_n:
+                return
         live_d = self.d[self.start :]
         live_i = self.i[self.start :]
         all_d = np.concatenate([live_d, *self._staged_d])
@@ -216,6 +229,39 @@ class CandidateBuffer:
         self._staged_d.clear()
         self._staged_i.clear()
         self._staged_n = 0
+
+    def _drop_seen(self) -> None:
+        """Filter staged batches against every id already committed (live
+        or emitted), first occurrence wins; batches stay in scan order."""
+        seen = self._seen
+        kept_d: list[np.ndarray] = []
+        kept_i: list[np.ndarray] = []
+        n = 0
+        for d_b, i_b in zip(self._staged_d, self._staged_i):
+            keep = np.ones(len(i_b), bool)
+            for p, x in enumerate(i_b):
+                xi = int(x)
+                if xi in seen:
+                    keep[p] = False
+                else:
+                    seen.add(xi)
+            if not keep.all():
+                d_b, i_b = d_b[keep], i_b[keep]
+            if len(i_b):
+                kept_d.append(d_b)
+                kept_i.append(i_b)
+                n += len(i_b)
+        self._staged_d = kept_d
+        self._staged_i = kept_i
+        self._staged_n = n
+
+    def seed_seen(self, ids) -> None:
+        """Mark ``ids`` as already seen (query-state rehydration)."""
+        self._seen.update(int(x) for x in np.asarray(ids).ravel())
+
+    def export_seen(self) -> np.ndarray:
+        """The seen-id set as a sorted int64 array (persistence)."""
+        return np.asarray(sorted(self._seen), np.int64)
 
     def take(self, k: int) -> tuple[np.ndarray, np.ndarray]:
         """Emit (and consume) the best ``k`` committed items."""

@@ -89,6 +89,11 @@ class IndexInfo:
     next_id: int = 0         # smallest never-used item id: default insert ids
                              # allocate from here (monotonic across compact(),
                              # so purged ids are never reissued)
+    spill_s: int = 0         # build-time spill: max ADDITIONAL leaf replicas
+                             # per vector (0 = single assignment, the default)
+    spill_eps: float = 0.0   # spill eligibility band vs the nearest leader:
+                             # l2/cosine  d_j <= (1+eps)*d_1 (multiplicative),
+                             # ip         d_j <= d_1 + eps   (additive)
 
     def to_attrs(self) -> dict:
         return {
@@ -106,6 +111,8 @@ class IndexInfo:
             GENERATION: self.generation,
             "insert_batch": self.insert_batch,
             "next_id": self.next_id,
+            "spill_s": self.spill_s,
+            "spill_eps": self.spill_eps,
         }
 
     @staticmethod
@@ -126,6 +133,8 @@ class IndexInfo:
             insert_batch=int(a.get("insert_batch", 8192)),
             # legacy indexes (no next_id) used default positional ids
             next_id=int(a.get("next_id", a.get("n_items", 0))),
+            spill_s=int(a.get("spill_s", 0)),
+            spill_eps=float(a.get("spill_eps", 0.0)),
         )
 
 

@@ -85,6 +85,13 @@ class ECPBuildConfig:
     seed: int = 0
     insert_batch: int = 8192         # items per device batch during insertion
     leaf_chunk_rows: int | None = None  # one chunk per cluster by default
+    spill_s: int = 0                 # max ADDITIONAL leaf replicas per vector:
+                                     # border vectors near several leaders are
+                                     # written into up to s extra leaves
+    spill_eps: float = 0.25          # spill band vs the nearest-leader distance
+                                     # d1: a leader at d_j qualifies when
+                                     # d_j <= d1 + eps*|d1| (l2/cosine) or
+                                     # d_j <= d1 + eps (ip)
 
 
 def _resolve_cap(cfg: ECPBuildConfig, dim: int, itemsize: int) -> int:
@@ -124,6 +131,69 @@ def _make_insert_fn(root_emb: np.ndarray, internal: list[PackedLevel], metric: s
 
 
 # ----------------------------------------------------------- shared stages
+def _spill_targets(
+    Q: np.ndarray,
+    leader_emb: np.ndarray,
+    primary: np.ndarray,
+    s: int,
+    eps: float,
+    metric: str,
+    *,
+    leaf_ids: np.ndarray | None = None,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Build-time spill assignment: for each row of ``Q``, the extra leaves
+    (beyond its tree-routed ``primary``) it should be replicated into.
+
+    Candidates are the row's nearest leaf leaders in ``(distance, leaf)``
+    order; one qualifies when its distance ``d_j`` is within the eps band
+    of the row's globally nearest leader distance ``d1`` — multiplicative
+    for l2/cosine (``d_j <= d1 + eps*|d1|``), additive for ip — capped at
+    ``s`` replicas.  Pure numpy (``np_distances`` per batch), so identical
+    batches always produce identical assignments: the one-shot build, the
+    streaming build, and compact()'s rebuild all re-batch rows the same
+    way and therefore spill bit-identically.
+
+    ``leaf_ids`` maps leader rows to leaf node ids (insert time, where the
+    centroids come from the parent level); by default row j IS leaf j (the
+    builds' leader array).  Returns ``(rows, leaves)`` index arrays.
+    """
+    s = int(s)
+    if s <= 0 or len(Q) == 0 or len(leader_emb) < 2:
+        return np.empty(0, np.int64), np.empty(0, np.int64)
+    d = np_distances(np.asarray(Q, np.float32), np.asarray(leader_emb, np.float32), metric)
+    if d.ndim == 1:
+        d = d[None, :]
+    n, l = d.shape
+    ids_of = np.arange(l, dtype=np.int64) if leaf_ids is None else np.asarray(leaf_ids, np.int64)
+    take = min(s + 1, l)  # the primary is usually among the nearest
+    if take < l:
+        part = np.argpartition(d, take - 1, axis=1)[:, :take]
+    else:
+        part = np.broadcast_to(np.arange(l), (n, l))
+    rows_out: list[int] = []
+    leaves_out: list[int] = []
+    for r in range(n):
+        cand = part[r]
+        dc = d[r, cand].astype(np.float64)
+        o = np.lexsort((ids_of[cand], dc))  # by distance, ties by leaf id
+        d1 = float(dc[o[0]])  # argpartition keeps the global nearest in cand
+        thresh = d1 + eps if metric == "ip" else d1 + eps * abs(d1)
+        p = int(primary[r])
+        cnt = 0
+        for oo in o:
+            j = int(ids_of[cand[oo]])
+            if j == p:
+                continue
+            if float(dc[oo]) > thresh:
+                break
+            rows_out.append(r)
+            leaves_out.append(j)
+            cnt += 1
+            if cnt >= s:
+                break
+    return np.asarray(rows_out, np.int64), np.asarray(leaves_out, np.int64)
+
+
 def _validate_build(n_items: int, dim: int, cfg: ECPBuildConfig, n_ids: int | None) -> None:
     if n_items == 0:
         raise ValueError(
@@ -139,6 +209,10 @@ def _validate_build(n_items: int, dim: int, cfg: ECPBuildConfig, n_ids: int | No
         raise ValueError(
             f"item_ids length {n_ids} does not match collection size {n_items}"
         )
+    if cfg.spill_s < 0:
+        raise ValueError(f"spill_s must be >= 0, got {cfg.spill_s}")
+    if cfg.spill_eps < 0:
+        raise ValueError(f"spill_eps must be >= 0, got {cfg.spill_eps}")
 
 
 def _hierarchy(leaders: np.ndarray, nodes_per_level, metric: str) -> list[list[np.ndarray]]:
@@ -366,11 +440,28 @@ def build_index(
         for lists in children
     ]
     insert = _make_insert_fn(leaders[: nodes_per_level[0]], internal_packed, cfg.metric)
-    leaf_of = np.empty(n_items, np.int32)
+    # (row, leaf) assignment pairs, built PER insert batch: each batch
+    # contributes its primary assignments in row order, then its spill
+    # replicas — exactly the order build_index_streaming's flush() appends
+    # them in, so the final stable sort by leaf groups rows identically
+    # for both builds.  At spill_s=0 this is today's arange/leaf_of pair.
+    pair_rows_l: list[np.ndarray] = []
+    pair_leaf_l: list[np.ndarray] = []
     for lo in range(0, n_items, cfg.insert_batch):
         hi = min(lo + cfg.insert_batch, n_items)
         q = jnp.asarray(data[lo:hi], jnp.float32)
-        leaf_of[lo:hi] = np.asarray(insert(q))
+        leaf_b = np.asarray(insert(q)).astype(np.int64)
+        pair_rows_l.append(np.arange(lo, hi, dtype=np.int64))
+        pair_leaf_l.append(leaf_b)
+        if cfg.spill_s > 0:
+            sr, slv = _spill_targets(
+                np.asarray(data[lo:hi], np.float32), leaders, leaf_b,
+                cfg.spill_s, cfg.spill_eps, cfg.metric,
+            )
+            pair_rows_l.append(sr + lo)
+            pair_leaf_l.append(slv)
+    pair_rows = np.concatenate(pair_rows_l)
+    pair_leaf = np.concatenate(pair_leaf_l)
 
     # --- write the file structure -----------------------------------------
     store = open_store(path, backend="fstore", create=True)
@@ -387,13 +478,15 @@ def build_index(
         seed=cfg.seed,
         insert_batch=cfg.insert_batch,
         next_id=int(item_ids.max()) + 1,
+        spill_s=max(0, int(cfg.spill_s)),
+        spill_eps=float(cfg.spill_eps),
     )
     _write_skeleton(store, info, leaders, item_ids[leader_idx], children, store_dt)
-    order = np.argsort(leaf_of, kind="stable")
-    sorted_leaf = leaf_of[order]
+    order = np.argsort(pair_leaf, kind="stable")
+    sorted_leaf = pair_leaf[order]
     bounds = np.searchsorted(sorted_leaf, np.arange(n_leaders + 1))
     for j in range(n_leaders):
-        members = order[bounds[j] : bounds[j + 1]]
+        members = pair_rows[order[bounds[j] : bounds[j + 1]]]
         store.write_node(
             cfg.levels,
             j,
@@ -517,6 +610,8 @@ def build_index_streaming(
         generation=generation,
         insert_batch=cfg.insert_batch,
         next_id=max(max_id + 1, next_id or 0),
+        spill_s=max(0, int(cfg.spill_s)),
+        spill_eps=float(cfg.spill_eps),
     )
     _write_skeleton(store, info, leaders, leader_item_ids, children, store_dt)
 
@@ -536,13 +631,24 @@ def build_index_streaming(
         if fill == 0:
             return
         q, ids_b = buf_q[:fill], buf_ids[:fill]
-        leaf = np.asarray(insert(jnp.asarray(q)))
-        order = np.argsort(leaf, kind="stable")
-        sl = leaf[order]
+        leaf = np.asarray(insert(jnp.asarray(q))).astype(np.int64)
+        rows_all = np.arange(fill, dtype=np.int64)
+        leaf_all = leaf
+        if cfg.spill_s > 0:
+            # spill replicas append AFTER this batch's primaries — the
+            # same (batch-primaries, batch-spills) order build_index's
+            # pair list records, so both builds write identical leaves
+            sr, slv = _spill_targets(
+                q, leaders, leaf, cfg.spill_s, cfg.spill_eps, cfg.metric
+            )
+            rows_all = np.concatenate([rows_all, sr])
+            leaf_all = np.concatenate([leaf, slv])
+        order = np.argsort(leaf_all, kind="stable")
+        sl = leaf_all[order]
         starts = np.flatnonzero(np.r_[True, sl[1:] != sl[:-1]])
         for s, e in zip(starts, np.r_[starts[1:], len(sl)]):
             j = int(sl[s])
-            rows = order[s:e]
+            rows = rows_all[order[s:e]]
             emb_w = q[rows].astype(store_dt)
             ids_w = ids_b[rows]
             if touched[j]:
@@ -808,6 +914,27 @@ def _split_leaf(index, ctx: dict, leaf: int, emb: np.ndarray, ids: np.ndarray, p
     ctx["written"].add((p_lv, p_nd))
 
 
+def _leaf_leaders(index) -> tuple[np.ndarray, np.ndarray]:
+    """Leaf-leader centroids and their leaf node ids, read from the parent
+    level (the root when levels == 1) through the index's node cache —
+    the same pre-mutation tree view beam routing uses."""
+    info = index.info
+    L = info.levels
+    if L == 1:
+        return (
+            np.asarray(index.root_emb, np.float32),
+            np.asarray(index.root_ids, np.int64),
+        )
+    embs: list[np.ndarray] = []
+    idss: list[np.ndarray] = []
+    for nd in range(info.nodes_per_level[L - 2]):
+        e, i = index.get_node(L - 1, nd)
+        if len(i):
+            embs.append(np.asarray(e, np.float32))
+            idss.append(np.asarray(i, np.int64))
+    return np.concatenate(embs), np.concatenate(idss)
+
+
 def insert_items(index, vectors: np.ndarray, ids: np.ndarray | None = None) -> dict:
     """Insert ``vectors`` [n, D] (or [D]) with item ``ids`` into a live
     index: beam-1 routing to the nearest leaf, append through the Store
@@ -848,7 +975,8 @@ def insert_items(index, vectors: np.ndarray, ids: np.ndarray | None = None) -> d
     tombs = layout.read_tombstones(attrs)
     resurrected = tombs & {int(x) for x in ids}
     purged_keys: set = set()
-    purged_rows = 0
+    purged_rows = 0     # physical rows removed (spill replicas count each)
+    purged_logical = 0  # distinct resurrected ids actually found + purged
     # ids below the allocator's floor may already exist in the index; one
     # pass over the leaf level finds them.  Tombstoned hits are purged
     # (the resurrect path — the new row must be the only one); LIVE hits
@@ -881,6 +1009,7 @@ def insert_items(index, vectors: np.ndarray, ids: np.ndarray | None = None) -> d
             for key, present in hits:
                 purged_rows += index.store.delete_rows(key[0], key[1], res_arr)
                 purged_keys.add(key)
+            purged_logical = len(found & resurrected)
     # a resurrected id above the allocator floor (or a phantom tombstone)
     # has no physical row to purge, but its tombstone must still drop —
     # the row being inserted now is the live one
@@ -890,12 +1019,30 @@ def insert_items(index, vectors: np.ndarray, ids: np.ndarray | None = None) -> d
     L = info.levels
     dt = np.dtype(info.dtype)
     cap = max(1, info.cluster_cap)
+    # spill replica plan, computed against the SAME pre-mutation tree view
+    # beam routing used.  Replication at insert time is best-effort: a
+    # target leaf at capacity is skipped rather than split (a replica is
+    # a recall hint, never worth a structural change).
+    spill_pairs: list[tuple[int, np.ndarray]] = []
+    if info.spill_s > 0:
+        lead_emb, lead_ids = _leaf_leaders(index)
+        sr, slv = _spill_targets(
+            Q, lead_emb, leaf.astype(np.int64),
+            info.spill_s, info.spill_eps, info.metric, leaf_ids=lead_ids,
+        )
+        if len(sr):
+            so = np.argsort(slv, kind="stable")
+            ssr, ssl = sr[so], slv[so]
+            st = np.flatnonzero(np.r_[True, ssl[1:] != ssl[:-1]])
+            for s0, e0 in zip(st, np.r_[st[1:], len(ssl)]):
+                spill_pairs.append((int(ssl[s0]), ssr[s0:e0]))
     ctx = {"npl": list(info.nodes_per_level), "written": set(), "splits": 0}
     order = np.argsort(leaf, kind="stable")
     sl = leaf[order]
     starts = np.flatnonzero(np.r_[True, sl[1:] != sl[:-1]])
     touched_leaves = 0
     appended = 0  # rows of COMPLETED leaf groups (the abort path records them)
+    spilled = 0   # replica rows actually placed (capacity permitting)
     try:
         for s, e in zip(starts, np.r_[starts[1:], len(sl)]):
             j = int(sl[s])
@@ -911,6 +1058,14 @@ def insert_items(index, vectors: np.ndarray, ids: np.ndarray | None = None) -> d
                 all_ids = np.concatenate([np.asarray(old_ids, np.int64), ids[rows]])
                 _split_leaf(index, ctx, j, all_emb, all_ids, parent_of[j])
             appended += len(rows)
+        for j, rows in spill_pairs:
+            fit = cap - _node_rows(index, [(L, j)])[0]
+            if fit <= 0:
+                continue
+            rows = rows[:fit]
+            index.store.append_rows(L, j, Q[rows].astype(dt), ids[rows])
+            ctx["written"].add((L, j))
+            spilled += len(rows)
     except Exception:
         # partial failure (e.g. a later split refused by a full parent
         # block): the prefix that DID complete must be recorded — its
@@ -920,7 +1075,7 @@ def insert_items(index, vectors: np.ndarray, ids: np.ndarray | None = None) -> d
         try:
             part_info = dc_replace(
                 info,
-                n_items=info.n_items + appended - purged_rows,
+                n_items=info.n_items + appended - purged_logical,
                 n_leaders=ctx["npl"][-1],
                 nodes_per_level=tuple(ctx["npl"]),
                 generation=info.generation + 1,
@@ -932,11 +1087,12 @@ def insert_items(index, vectors: np.ndarray, ids: np.ndarray | None = None) -> d
         raise
 
     # metadata: counts, id allocator, generation, resurrected tombstones.
-    # n_items tracks physical rows: +n appended, -rows actually purged
-    # (a resurrected id that never physically existed purges nothing).
+    # n_items tracks LOGICAL items: +n inserted, -ids actually purged (a
+    # resurrected id that never physically existed purges nothing; spill
+    # replicas are extra physical rows of the same item, never counted).
     new_info = dc_replace(
         info,
-        n_items=info.n_items + n - purged_rows,
+        n_items=info.n_items + n - purged_logical,
         n_leaders=ctx["npl"][-1],
         nodes_per_level=tuple(ctx["npl"]),
         generation=info.generation + 1,
@@ -947,6 +1103,7 @@ def insert_items(index, vectors: np.ndarray, ids: np.ndarray | None = None) -> d
         "inserted": n,
         "splits": ctx["splits"],
         "leaves": touched_leaves,
+        "spilled": spilled,
         "generation": new_info.generation,
     }
 
@@ -1031,12 +1188,20 @@ def compact(index) -> dict:
         order = np.argsort(ids_flat, kind="stable")
         sorted_ids = ids_flat[order]
         if len(sorted_ids) > 1 and (sorted_ids[1:] == sorted_ids[:-1]).any():
-            raise RuntimeError("duplicate item ids in the index; cannot compact")
+            if info.spill_s <= 0:
+                raise RuntimeError("duplicate item ids in the index; cannot compact")
+            # spill-built index: replicas of one id are expected; keep the
+            # first physical occurrence (they are bitwise-identical rows).
+            # The rebuild below re-derives fresh replicas from spill_s.
+            keep = np.r_[True, sorted_ids[1:] != sorted_ids[:-1]]
+            order = order[keep]
+            sorted_ids = sorted_ids[keep]
+        n_logical = len(sorted_ids)
         mm = np.memmap(raw, dtype=dt, mode="r", shape=(n_live, info.dim))
 
         def canonical_chunks():
             # live items in ascending-id order, O(chunk) resident
-            for lo in range(0, n_live, 8192):
+            for lo in range(0, n_logical, 8192):
                 sel = order[lo : lo + 8192]
                 yield np.asarray(mm[sel], np.float32), sorted_ids[lo : lo + 8192]
 
@@ -1048,6 +1213,8 @@ def compact(index) -> dict:
             seed=info.seed,
             insert_batch=info.insert_batch,  # replay the build's exact
             # assignment batching: jit'd argmin results must not shift
+            spill_s=info.spill_s,
+            spill_eps=info.spill_eps,
         )
         gen = info.generation + 1
         if getattr(store, "fstore", None) is not None:
@@ -1082,7 +1249,7 @@ def compact(index) -> dict:
 
     index._apply_mutation(new_info, (), tombstones=set(), structural=True)
     return {
-        "live": n_live,
+        "live": n_logical,
         "purged": n_scanned - n_live,
         "leaves": new_info.nodes_per_level[-1],
         "generation": new_info.generation,

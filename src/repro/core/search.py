@@ -122,7 +122,7 @@ class QueryState:
     flat-array structures of core/frontier.py."""
 
     q: np.ndarray
-    b: int
+    b: int                   # configured base leaf budget (never mutated)
     mx_inc: int
     exclude: set = field(default_factory=set)
     T: Frontier = field(default_factory=Frontier)
@@ -130,6 +130,11 @@ class QueryState:
     started: bool = False
     increments: int = 0
     emitted: int = 0
+    probe_m: int = 1         # frontier pops per traversal step (multi-probe)
+    b_cur: int = 0           # transient budget: reset to ``b`` at the start
+                             # of every increment, doubled in place of the
+                             # old in-place ``qs.b *= 2`` — so a saved or
+                             # continued query never runs at an inflated b
     stats: SearchStats = field(default_factory=SearchStats)
     _excl_arr: np.ndarray | None = None
     # quantized-scan bookkeeping: virtual_i mirrors the candidate count
@@ -321,6 +326,14 @@ class ECPQuery(Query):
             store.write_array(f"{rg}/item_dists", d)
             store.write_array(f"{rg}/item_ids", i)
             store.write_array(f"{rg}/frontier", t)
+            # spill dedup state: ids ever committed/emitted, so a restored
+            # continuation can never re-emit a replica's id
+            if isinstance(qs, legacy.LegacyQueryState):
+                seen = np.asarray(sorted(qs.seen), np.int64)
+            else:
+                seen = qs.I.export_seen()
+            if len(seen):
+                store.write_array(f"{rg}/seen_ids", seen)
             store.write_attrs(
                 rg,
                 {
@@ -330,6 +343,7 @@ class ECPQuery(Query):
                     "emitted": qs.emitted,
                     "started": qs.started,
                     "exclude": sorted(int(x) for x in qs.exclude),
+                    "probe_m": qs.probe_m,
                 },
             )
         return name
@@ -369,6 +383,7 @@ class ECPIndex:
         quantized: "bool | str" = False,
         rerank_depth: int | None = None,
         pin_internal: bool = False,
+        probe_m: int = 1,
     ):
         if engine not in ENGINES:
             raise ValueError(f"unknown engine: {engine!r} ({'|'.join(ENGINES)})")
@@ -426,9 +441,13 @@ class ECPIndex:
         self.engine = engine
         self._scorer = scorer
         self._batch_matrix = bool(batch_matrix)
-        # per-node squared-norm cache: l2 scoring reuses (c*c).sum(-1)
+        # per-node squared-norm cache: l2 reuses (c*c).sum(-1) directly and
+        # cosine takes np.sqrt of it — bitwise what np.linalg.norm computes
+        # — so both metrics stop recomputing norms on every leaf visit
         self._norms = (
-            NodeNormCache(norm_cache_entries) if self.info.metric == "l2" else None
+            NodeNormCache(norm_cache_entries)
+            if self.info.metric in ("l2", "cosine")
+            else None
         )
         # device-resident scoring pipeline (quantized leaf scan + rerank):
         # qformat follows the blob's persisted companion tier; a string
@@ -447,6 +466,10 @@ class ECPIndex:
         # hot-level pinning: park every internal level in the cache's
         # pinned (LRU-exempt) region at open so leaf churn never evicts
         # the navigation structure — warm internal_reads drop to zero
+        # multi-probe traversal default: every search pops this many
+        # frontier entries per step (per-call ``probe_m=`` overrides it);
+        # 1 reproduces strict best-first traversal bit-identically
+        self._probe_m = max(1, int(probe_m))
         self._pin_internal = bool(pin_internal)
         if self._pin_internal and self.info.levels > 1:
             self._preload_internal()
@@ -859,6 +882,7 @@ class ECPIndex:
         b: int | None = 8,
         mx_inc: int = 4,
         exclude: set | None = None,
+        probe_m: int | None = None,
     ) -> ResultSet:
         """New search over one vector [D] or a batch [B, D].
 
@@ -866,15 +890,25 @@ class ECPIndex:
         ``next(k)`` continuation, ``save()``, and ``close()``.  Batch
         queries traverse in lockstep rounds with cross-query node-fetch
         dedup (``.query.batch_stats``).
+
+        ``probe_m`` overrides the index's multi-probe width for this
+        query: each traversal step pops the top-``probe_m`` frontier
+        entries instead of just the single best, widening descent (and,
+        past the leaf-budget boundary, scanning up to ``probe_m - 1``
+        extra leaves) for higher recall at the same ``b``.  ``probe_m=1``
+        (the default) is bit-identical to strict best-first traversal.
         """
         b = 8 if b is None else int(b)
+        pm = self._probe_m if probe_m is None else max(1, int(probe_m))
         q = np.asarray(q, np.float32)
         single = q.ndim == 1
         Q = q[None, :] if single else q
         excl = set(exclude) if exclude else set()
         if self.engine == "legacy":
             states = [
-                legacy.LegacyQueryState(q=row, b=b, mx_inc=mx_inc, exclude=set(excl))
+                legacy.LegacyQueryState(
+                    q=row, b=b, mx_inc=mx_inc, exclude=set(excl), probe_m=pm
+                )
                 for row in Q
             ]
             rows = []
@@ -883,8 +917,14 @@ class ECPIndex:
                 rows.append(legacy.next_items(self, qs, k))
             return self._result(rows, states, k, single, ECPQuery(self, states, single=single))
         states = [
-            QueryState(q=row, b=b, mx_inc=mx_inc, exclude=set(excl)) for row in Q
+            QueryState(q=row, b=b, mx_inc=mx_inc, exclude=set(excl), probe_m=pm)
+            for row in Q
         ]
+        if self.info.spill_s > 0:
+            # spill-built index: a vector may live in several leaves —
+            # id-level dedup at emission keeps next(k) duplicate-free
+            for qs in states:
+                qs.I.dedup = True
         self._quant_seq += 1
         if len(states) == 1:
             self._increment(states[0], k)
@@ -950,6 +990,7 @@ class ECPIndex:
             return
         info = self.info
         leaf_cnt = 0
+        qs.b_cur = qs.b  # each increment starts from the configured budget
         loads_before = self.load_node_count
         io_before = self.store.io.snapshot()
         qs._excl_arr = None  # re-read the (mutable) exclude set
@@ -957,35 +998,46 @@ class ECPIndex:
         if not qs.started:
             self._start(qs)
 
+        # Each step pops a probe group — the top-min(probe_m, |T|) frontier
+        # entries taken BEFORE any of them is expanded (children pushed by
+        # the group land in the next group, exactly one batch-engine round).
+        # Budget checks stay inline per leaf but only break at the group
+        # boundary, so a group may stage up to probe_m - 1 leaves past the
+        # stopping point — that overshoot is the recall widening.
+        # probe_m=1 is exactly the old single-pop loop.
         while qs.T:
-            dist, is_leaf, level, node = qs.T.pop()
-            qs.stats.nodes_opened += 1
-            emb, ids = self.get_node(level, node)
-            if len(ids) == 0:
-                continue
-            d = self._score_row(qs.q, emb, self._sqnorms(level, node, emb), leaf=bool(is_leaf))
-            qs.stats.distance_calcs += len(ids)
-            if is_leaf:
-                qs.stats.leaves_opened += 1
-                self._stage_leaf(qs, d, ids)
-                leaf_cnt += 1
-            else:
-                qs.T.push_batch(d, ids, 1 if (level + 1) == info.levels else 0, level + 1)
-                if self._store_prefetch is not None:
-                    # async: start loading the nearest children while the
-                    # traversal keeps scoring (frontier prefetch)
-                    want = self._prefetch_hint(level + 1, ids, d)
-                    if want:
-                        self._store_prefetch(want, on_node=self._on_prefetched)
-            if is_leaf and leaf_cnt >= qs.b:
-                if len(qs.I) >= k:
-                    break
-                if qs.mx_inc == -1 or qs.increments < qs.mx_inc:
-                    qs.increments += 1
-                    qs.stats.increments += 1
-                    qs.b *= 2
+            stop = False
+            group = [qs.T.pop() for _ in range(min(qs.probe_m, len(qs.T)))]
+            for dist, is_leaf, level, node in group:
+                qs.stats.nodes_opened += 1
+                emb, ids = self.get_node(level, node)
+                if len(ids) == 0:
+                    continue
+                d = self._score_row(qs.q, emb, self._sqnorms(level, node, emb), leaf=bool(is_leaf))
+                qs.stats.distance_calcs += len(ids)
+                if is_leaf:
+                    qs.stats.leaves_opened += 1
+                    self._stage_leaf(qs, d, ids)
+                    leaf_cnt += 1
                 else:
-                    break
+                    qs.T.push_batch(d, ids, 1 if (level + 1) == info.levels else 0, level + 1)
+                    if self._store_prefetch is not None:
+                        # async: start loading the nearest children while
+                        # the traversal keeps scoring (frontier prefetch)
+                        want = self._prefetch_hint(level + 1, ids, d)
+                        if want:
+                            self._store_prefetch(want, on_node=self._on_prefetched)
+                if is_leaf and leaf_cnt >= qs.b_cur:
+                    if len(qs.I) >= k:
+                        stop = True
+                    elif qs.mx_inc == -1 or qs.increments < qs.mx_inc:
+                        qs.increments += 1
+                        qs.stats.increments += 1
+                        qs.b_cur *= 2
+                    else:
+                        stop = True
+            if stop:
+                break
         qs.stats.node_loads += self.load_node_count - loads_before
         # NOTE: with an AsyncPrefetchStore, background reads count when they
         # complete, so per-traversal io can lag slightly; store.drain() gives
@@ -1018,6 +1070,7 @@ class ECPIndex:
         io_before = self.store.io.snapshot()
         for qs in states:
             qs._excl_arr = None  # re-read the (mutable) exclude set
+            qs.b_cur = qs.b  # each increment starts from the configured budget
             if not qs.started:
                 self._start(qs)
             if quant and qs.virtual_i is None:
@@ -1029,10 +1082,14 @@ class ECPIndex:
             agg.rounds += 1
             pops = []
             for qs in active:
-                d0, is_leaf, level, node = qs.T.pop()
-                qs.stats.nodes_opened += 1
+                # multi-probe: each round takes the row's top-probe_m
+                # frontier entries (probe_m=1 = the old single pop), so
+                # the round's dedup/coalescing window widens with m
+                for _ in range(min(qs.probe_m, len(qs.T))):
+                    d0, is_leaf, level, node = qs.T.pop()
+                    qs.stats.nodes_opened += 1
+                    pops.append((qs, is_leaf, level, node))
                 qs.stats.rounds += 1
-                pops.append((qs, is_leaf, level, node))
             # cross-query fetch dedup: unique (level, node) demands, one
             # batched read for all of them
             key_rows: dict[tuple, list] = {}
@@ -1116,13 +1173,13 @@ class ECPIndex:
                             qs.virtual_i += int(len(d_f))
                             self._note_exact(qs, d_f)
                         leaf_cnt[id(qs)] += 1
-                        if leaf_cnt[id(qs)] >= qs.b:
+                        if leaf_cnt[id(qs)] >= qs.b_cur:
                             if self._ilen(qs) >= k:
                                 done.add(id(qs))
                             elif qs.mx_inc == -1 or qs.increments < qs.mx_inc:
                                 qs.increments += 1
                                 qs.stats.increments += 1
-                                qs.b *= 2
+                                qs.b_cur *= 2
                             else:
                                 done.add(id(qs))
                     else:
@@ -1218,13 +1275,13 @@ class ECPIndex:
             # have staged: every live row of the leaf, survivors or not
             qs.virtual_i += qn.n_rows - n_dead
             leaf_cnt[id(qs)] += 1
-            if leaf_cnt[id(qs)] >= qs.b:
+            if leaf_cnt[id(qs)] >= qs.b_cur:
                 if qs.virtual_i >= k:
                     done.add(id(qs))
                 elif qs.mx_inc == -1 or qs.increments < qs.mx_inc:
                     qs.increments += 1
                     qs.stats.increments += 1
-                    qs.b *= 2
+                    qs.b_cur *= 2
                 else:
                     done.add(id(qs))
 
@@ -1438,19 +1495,29 @@ class ECPIndex:
             d = store.read_array(f"{rg}/item_dists")
             i = store.read_array(f"{rg}/item_ids")
             t = store.read_array(f"{rg}/frontier")
+            seen = (
+                store.read_array(f"{rg}/seen_ids")
+                if store.exists(f"{rg}/seen_ids")
+                else None
+            )
             if self.engine == "legacy":
-                qs = legacy.load_state(q, a, d, i, t)
+                qs = legacy.load_state(q, a, d, i, t, seen_ids=seen)
             else:
                 qs = QueryState(
                     q=q,
                     b=int(a["b"]),
                     mx_inc=int(a["mx_inc"]),
                     exclude=set(a.get("exclude", [])),
+                    probe_m=int(a.get("probe_m", 1)),
                 )
                 qs.increments = int(a["increments"])
                 qs.emitted = int(a["emitted"])
                 qs.started = bool(a["started"])
                 qs.I = CandidateBuffer.from_items(d, i)
+                if self.info.spill_s > 0:
+                    qs.I.dedup = True
+                    if seen is not None:
+                        qs.I.seed_seen(seen)
                 qs.T = Frontier.from_rows(t)
             states.append(qs)
         batch_stats = (
@@ -1508,6 +1575,7 @@ class ECPSnapshot(ECPIndex):
         self._rerank_depth = parent._rerank_depth
         self._qformat = parent._qformat
         self._quant_seq = parent._quant_seq
+        self._probe_m = parent._probe_m
         # never pin from a snapshot: its versioned keys outlive the pin's
         # usefulness once the snapshot closes (parent's pins stay shared)
         self._pin_internal = False

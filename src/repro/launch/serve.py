@@ -247,6 +247,8 @@ class Server:
     def search(
         self, q, k: int = 100, *, b=None, deadline_ms=None, **opts
     ) -> tuple[ResultSet, int]:
+        """Serve one search; extra ``opts`` (e.g. the recall knob
+        ``probe_m``) flow through to the underlying searcher."""
         t0 = time.perf_counter()
         if self.scheduler is not None:
             res = self.scheduler.search(q, k, b=b, deadline_ms=deadline_ms, **opts)

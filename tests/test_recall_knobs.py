@@ -1,0 +1,374 @@
+"""The two recall knobs — multi-probe traversal (``probe_m``) and
+build-time spill replication (``spill_s``) — plus the engine bugfixes
+that rode along:
+
+  * probe_m=1 / spill_s=0 stays bit-identical across {fstore, blob} x
+    {flat-single, flat-batch, legacy} including ``next(k)`` continuation
+    and mid-stream save/load,
+  * every engine agrees bit-identically at probe_m >= 2 as well (the
+    probe group is popped BEFORE expansion in all of them),
+  * a spill-built index never emits a duplicate id — search, ``next(k)``,
+    after delete, after insert, after compact,
+  * recall@10 is monotone in probe_m and improved by spill,
+  * query ``b`` stays pinned at the configured base across b-doubling
+    (and across save/load),
+  * the node-norm cache serves cosine (not just l2) bit-identically,
+  * ``allocate_effort`` clamps/fails by the documented budget-floor rule.
+"""
+import numpy as np
+import pytest
+
+from repro.core import ECPBuildConfig, build_index, convert, open_index
+from repro.core.distances import np_distances
+
+N, DIM = 5000, 24
+BACKENDS = ("fstore", "blob")
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    from repro.data import clustered_vectors
+
+    data, _ = clustered_vectors(0, n=N, dim=DIM, n_clusters=48)
+    root = tmp_path_factory.mktemp("knobs")
+    paths = {}
+    for s in (0, 1, 2):
+        p = str(root / f"ecp_s{s}")
+        build_index(
+            data, p, ECPBuildConfig(levels=2, metric="l2", cluster_cap=64, seed=0, spill_s=s)
+        )
+        paths[("fstore", s)] = p
+        paths[("blob", s)] = str(convert(p, root / f"ecp_s{s}.blob"))
+    rng = np.random.default_rng(7)
+    queries = (
+        data[rng.integers(0, N, 12)]
+        + 0.05 * rng.normal(size=(12, DIM)).astype(np.float32)
+    ).astype(np.float32)
+    return data, paths, queries
+
+
+def _open(paths, backend, spill=0, **kw):
+    return open_index(paths[(backend, spill)], mode="file", backend=backend, **kw)
+
+
+def _assert_same(a, b, msg=""):
+    np.testing.assert_array_equal(a.ids, b.ids, err_msg=f"{msg}: ids")
+    np.testing.assert_array_equal(a.dists, b.dists, err_msg=f"{msg}: dists")
+
+
+# --------------------------------------------------------- probe_m parity
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("m", (1, 2, 3))
+def test_engines_bit_identical_at_any_probe_m(built, backend, m):
+    """flat-single, flat-batch and legacy agree bit-identically at every
+    probe width — probe_m=1 is the historical strict best-first gate."""
+    _, paths, queries = built
+    flat = _open(paths, backend)
+    leg = _open(paths, backend, engine="legacy")
+    rb = flat.search(queries, k=20, b=4, probe_m=m)
+    for r, q in enumerate(queries):
+        rl = leg.search(q, k=20, b=4, probe_m=m)
+        rs = flat.search(q, k=20, b=4, probe_m=m)
+        np.testing.assert_array_equal(rs.ids, rl.ids, err_msg=f"single m={m} row {r}")
+        np.testing.assert_array_equal(rb.ids[r], rl.ids, err_msg=f"batch m={m} row {r}")
+        np.testing.assert_array_equal(rb.dists[r], rl.dists, err_msg=f"batch m={m} row {r}")
+
+
+def test_quantized_engine_bit_identical_at_probe_m(built):
+    _, paths, queries = built
+    import pathlib
+
+    blob = paths[("blob", 0)]
+    qblob = str(pathlib.Path(blob).parent / "ecp_s0.qblob")
+    convert(paths[("fstore", 0)], qblob, quant="int8")
+    quant = open_index(qblob, mode="file", backend="blob", quantized=True)
+    leg = _open(paths, "blob", engine="legacy")
+    for m in (1, 2):
+        rq = quant.search(queries, k=20, b=4, probe_m=m)
+        for r, q in enumerate(queries):
+            rl = leg.search(q, k=20, b=4, probe_m=m)
+            np.testing.assert_array_equal(rq.ids[r], rl.ids, err_msg=f"quant m={m} row {r}")
+    quant.close()
+    leg.close()
+
+
+def test_probe_m_default_flows_from_open_index(built):
+    """open_index(probe_m=2) sets the index default; per-call override wins."""
+    _, paths, queries = built
+    wide = _open(paths, "blob", probe_m=2)
+    narrow = _open(paths, "blob")
+    q = queries[0]
+    _assert_same(
+        wide.search(q, k=20, b=4), narrow.search(q, k=20, b=4, probe_m=2), "default"
+    )
+    _assert_same(
+        wide.search(q, k=20, b=4, probe_m=1), narrow.search(q, k=20, b=4), "override"
+    )
+    wide.close()
+    narrow.close()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_probe_m_continuation_and_save_load(built, backend):
+    """next(k) continuation at probe_m=2, with a save/load mid-stream,
+    stays bit-identical to the uninterrupted legacy stream."""
+    _, paths, queries = built
+    flat = _open(paths, backend)
+    leg = _open(paths, backend, engine="legacy")
+    rf = flat.search(queries[1], k=10, b=4, probe_m=2)
+    rl = leg.search(queries[1], k=10, b=4, probe_m=2)
+    _assert_same(rf, rl, backend)
+    if backend == "fstore":  # blob has no query-state persistence
+        rf.query.save("knob_q")
+        flat2 = _open(paths, backend)
+        qf = flat2.load_query("knob_q")
+    else:
+        flat2, qf = None, rf.query
+    for i in range(3):
+        _assert_same(qf.next(15), rl.query.next(15), f"{backend} next#{i}")
+    flat.close()
+    if flat2 is not None:
+        flat2.close()
+    leg.close()
+
+
+# ----------------------------------------------------------- spill parity
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_spill_engines_agree_and_never_duplicate(built, backend):
+    _, paths, queries = built
+    flat = _open(paths, backend, spill=1)
+    leg = _open(paths, backend, spill=1, engine="legacy")
+    rb = flat.search(queries, k=20, b=4)
+    for r, q in enumerate(queries):
+        rl = leg.search(q, k=20, b=4)
+        np.testing.assert_array_equal(rb.ids[r], rl.ids, err_msg=f"spill row {r}")
+        live = [int(x) for x in rb.ids[r] if x >= 0]
+        assert len(live) == len(set(live)), f"duplicate id emitted, row {r}"
+    flat.close()
+    leg.close()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_spill_next_k_never_duplicates_across_stream(built, backend):
+    """No id may repeat across the WHOLE emission stream, including after
+    a mid-stream save/load (the seen-set must persist; fstore only —
+    blob has no query-state persistence)."""
+    _, paths, queries = built
+    for kw in ({}, {"engine": "legacy"}):
+        idx = _open(paths, backend, spill=2, **kw)
+        rs = idx.search(queries[2], k=8, b=4)
+        seen = [int(x) for x in rs.ids if x >= 0]
+        if backend == "fstore":
+            rs.query.save("spill_q")
+            idx2 = _open(paths, backend, spill=2, **kw)
+            qh = idx2.load_query("spill_q")
+        else:
+            idx2, qh = None, rs.query
+        for _ in range(4):
+            nxt = qh.next(8)
+            seen += [int(x) for x in nxt.ids if x >= 0]
+        assert len(seen) == len(set(seen)), f"duplicate across stream ({kw})"
+        idx.close()
+        if idx2 is not None:
+            idx2.close()
+
+
+def test_spill_build_streaming_matches_oneshot(built, tmp_path):
+    """Streamed spill build produces the same logical leaves as one-shot."""
+    from repro.core import layout
+    from repro.core.lifecycle import build_index_streaming
+    from repro.core.store import open_store
+
+    data, paths, _ = built
+    cfg = ECPBuildConfig(levels=2, metric="l2", cluster_cap=64, seed=0, spill_s=1)
+
+    def chunks():
+        return iter(
+            (data[i : i + 1100], np.arange(i, min(i + 1100, N), dtype=np.int64))
+            for i in range(0, N, 1100)
+        )
+
+    build_index_streaming(chunks, str(tmp_path / "s1s"), cfg)
+    s1 = open_store(paths[("fstore", 1)])
+    s2 = open_store(str(tmp_path / "s1s"))
+    info = layout.IndexInfo.from_attrs(s1.read_attrs(layout.INFO))
+    assert info.spill_s == 1 and info.spill_eps > 0
+    for j in range(info.nodes_per_level[-1]):
+        e1, i1 = s1.get_node(2, j)
+        e2, i2 = s2.get_node(2, j)
+        np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+        np.testing.assert_array_equal(np.asarray(e1), np.asarray(e2))
+
+
+def test_spill_under_delete_insert_compact(built, tmp_path):
+    """Mutations on a spill-built index: deletes filter every replica,
+    inserts place best-effort replicas, compact dedups + rebuilds spill,
+    and n_items stays the logical live count throughout."""
+    data, _, queries = built
+    path = str(tmp_path / "mut")
+    build_index(
+        data, path, ECPBuildConfig(levels=2, metric="l2", cluster_cap=64, seed=0, spill_s=1)
+    )
+    idx = open_index(path, mode="file")
+    assert idx.info.n_items == N  # replicas not counted
+    rng = np.random.default_rng(5)
+    newv = (data[rng.integers(0, N, 30)] + 0.02 * rng.normal(size=(30, DIM))).astype(
+        np.float32
+    )
+    r = idx.insert(newv)
+    assert r["inserted"] == 30 and idx.info.n_items == N + 30
+    assert "spilled" in r  # replica placement is reported
+    idx.delete(np.arange(50, 90))
+    rs = idx.search(data[60], k=30, b=16)
+    live = [int(x) for x in rs.ids if x >= 0]
+    assert not (set(live) & set(range(50, 90))), "tombstoned replica emitted"
+    assert len(live) == len(set(live))
+    c = idx.compact()
+    assert c["live"] == N + 30 - 40 == idx.info.n_items
+    assert idx.info.spill_s == 1  # spill metadata survives the rebuild
+    rs = idx.search(queries[0], k=20, b=8)
+    live = [int(x) for x in rs.ids if x >= 0]
+    assert len(live) == len(set(live))
+    idx.close()
+
+
+# ---------------------------------------------------------------- recall
+def test_recall_monotone_in_probe_m_and_spill(built):
+    data, paths, queries = built
+    exact = np.argsort(np_distances(queries, data, "l2"), axis=1, kind="stable")[:, :10]
+    exact_sets = [set(map(int, row)) for row in exact]
+
+    def recall(spill, m):
+        idx = _open(paths, "blob", spill=spill)
+        try:
+            res = idx.search(queries, k=10, b=8, probe_m=m)
+        finally:
+            idx.close()
+        hits = sum(
+            len(exact_sets[r] & {int(x) for x in res.ids[r] if x >= 0})
+            for r in range(len(queries))
+        )
+        return hits / (len(queries) * 10)
+
+    r1, r2, r4 = recall(0, 1), recall(0, 2), recall(0, 4)
+    assert r1 <= r2 <= r4, f"recall not monotone in probe_m: {r1} {r2} {r4}"
+    assert recall(1, 1) >= r1, "spill_s=1 dropped recall at probe_m=1"
+    assert max(r2, r4, recall(1, 1), recall(2, 1)) > r1, (
+        "no knob setting improves on strict best-first at equal b"
+    )
+
+
+# ----------------------------------------------------- bugfix regressions
+def test_query_b_pinned_across_doubling_and_save(built):
+    """qs.b is the configured base budget: b-doubling happens on a
+    transient copy, so continuations and save/load see the base value."""
+    _, paths, queries = built
+    for kw in ({}, {"engine": "legacy"}):
+        idx = _open(paths, "fstore", **kw)
+        rs = idx.search(queries[0], k=4000, b=2, mx_inc=5)  # forces doubling
+        assert rs.query.stats.increments > 0, "test needs b-doubling to trigger"
+        assert rs.query.b == 2, f"b mutated to {rs.query.b} ({kw})"
+        rs.query.save("pinned_q")
+        idx2 = _open(paths, "fstore", **kw)
+        qh = idx2.load_query("pinned_q")
+        assert qh.b == 2, f"saved b drifted to {qh.b} ({kw})"
+        idx.close()
+        idx2.close()
+
+
+def test_saved_query_after_doubling_continues_identically(built):
+    """Continuation after save/load == uninterrupted continuation, even
+    when the saved increment had already doubled b (the transient b_cur
+    is reset per increment, not persisted)."""
+    _, paths, queries = built
+    a = _open(paths, "fstore")
+    ra = a.search(queries[3], k=200, b=2, mx_inc=3)
+    ref = [ra.query.next(50) for _ in range(2)]
+    b = _open(paths, "fstore")
+    rb = b.search(queries[3], k=200, b=2, mx_inc=3)
+    rb.query.save("doubled_q")
+    c = _open(paths, "fstore")
+    qh = c.load_query("doubled_q")
+    for i, want in enumerate(ref):
+        _assert_same(qh.next(50), want, f"next#{i}")
+    a.close()
+    b.close()
+    c.close()
+
+
+def test_cosine_norm_cache_parity_and_hit(tmp_path):
+    """The per-node sqnorm cache now serves cosine: results bit-identical
+    to the uncached legacy path AND the cache actually populates."""
+    from repro.data import clustered_vectors
+
+    data, _ = clustered_vectors(0, n=2000, dim=16, n_clusters=24)
+    path = str(tmp_path / "cos")
+    build_index(data, path, ECPBuildConfig(levels=2, metric="cosine", cluster_cap=64))
+    idx = open_index(path, mode="file")
+    leg = open_index(path, mode="file", engine="legacy")
+    assert idx._norms is not None, "norm cache disabled for cosine"
+    rs = idx.search(data[:6], k=10, b=6)
+    assert len(idx._norms._d) > 0, "cosine search never populated the norm cache"
+    for r in range(6):
+        rl = leg.search(data[r], k=10, b=6)
+        np.testing.assert_array_equal(rs.ids[r], rl.ids, err_msg=f"cosine row {r}")
+        np.testing.assert_array_equal(rs.dists[r], rl.dists, err_msg=f"cosine row {r}")
+    # the cached-path contract: sqrt(sum(c*c)) is bitwise what linalg.norm computes
+    c = np.asarray(data[:100], np.float32)
+    np.testing.assert_array_equal(
+        np.sqrt((c * c).sum(-1)), np.linalg.norm(c, axis=-1)
+    )
+    idx.close()
+    leg.close()
+
+
+# ----------------------------------------------- allocate_effort edge rule
+def test_allocate_effort_budget_floor_rule():
+    from repro.core.federation import allocate_effort
+
+    d = np.array([0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8])
+    owner = np.array([0, 1, 2, 3, 0, 1, 2, 3])
+    # clamp: b=4 cannot fund 4 shards at b_min=2 -> probe count drops to 2
+    probe, alloc = allocate_effort(d, owner, 4, n_shards=4, b_min=2)
+    assert len(probe) == 2 and alloc.sum() == 4 and (alloc >= 2).all()
+    # b smaller than the shard count: still conserves b on fewer shards
+    probe, alloc = allocate_effort(d, owner, 3, n_shards=4, b_min=1)
+    assert len(probe) == 3 and alloc.sum() == 3
+    # b_min=0 is "no floor" (effective 1), not an error
+    probe, alloc = allocate_effort(d, owner, 8, n_shards=4, b_min=0)
+    assert alloc.sum() == 8 and (alloc >= 1).all()
+    # one shard takes the whole budget regardless of floors
+    probe, alloc = allocate_effort(
+        np.array([0.1, 0.2]), np.array([0, 0]), 5, n_shards=1, b_min=3
+    )
+    assert list(probe) == [0] and list(alloc) == [5]
+    # probe_m widens the per-shard floor -> fewer shards funded
+    probe_w, alloc_w = allocate_effort(d, owner, 8, n_shards=4, b_min=2, probe_m=2)
+    assert len(probe_w) == 2 and alloc_w.sum() == 8 and (alloc_w >= 4).all()
+    # negative floors are refused
+    with pytest.raises(ValueError):
+        allocate_effort(d, owner, 8, n_shards=4, b_min=-1)
+
+
+def test_federation_probe_m_threading(tmp_path):
+    """FederatedIndex(probe_m=...) forwards the knob to every shard and
+    conserves total b; probe_m=1 matches the explicit per-call default."""
+    from repro.core import build_federation
+    from repro.data import clustered_vectors
+
+    data, _ = clustered_vectors(0, n=2400, dim=16, n_clusters=24)
+    root = build_federation(
+        data, tmp_path / "fed", n_shards=3,
+        cfg=ECPBuildConfig(levels=2, cluster_cap=64, seed=0),
+    )
+    fed = open_index(root, probe_m=2)
+    try:
+        assert fed.probe_m == 2
+        q = data[5]
+        r_def = fed.search(q, k=10, b=9)
+        r_exp = fed.search(q, k=10, b=9, probe_m=2)
+        np.testing.assert_array_equal(r_def.ids, r_exp.ids)
+        total = sum(fed.search(q, k=10, b=9).query.allocation.values())
+        assert total == 9, "federated probe_m must conserve total b"
+    finally:
+        fed.close()
